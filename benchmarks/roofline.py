@@ -1,0 +1,181 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Per (arch x shape x mesh) cell, from experiments/dryrun/*.json:
+
+  compute    = HLO_FLOPs / (chips x 197e12)           [bf16 peak / chip]
+  memory     = HLO_bytes / (chips x 819e9)            [HBM BW / chip]
+  collective = collective_bytes / link_bw             [~50 GB/s/link ICI]
+
+cost_analysis() runs on the post-SPMD per-device module, so HLO_FLOPs and
+HLO_bytes are already per-device: divide by per-chip peaks only (the
+formulas above keep the assignment's chips-normalised form by treating the
+recorded numbers as global/chips). Collective bytes are per-device operand
+bytes on the wire; ring-algorithm multipliers (~2(N-1)/N) are *not* applied
+— recorded as a stated assumption.
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (prefill/decode), N = active params.
+The MODEL/HLO ratio measures how much compiled compute is "useful"
+(attention, remat recompute, MoE dispatch and optimizer all make HLO larger
+than 6ND; a ratio far below ~0.5 flags waste).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+TRAIN_MULT = {"train_4k": 6, "prefill_32k": 2, "decode_32k": 2, "long_500k": 2}
+
+
+def active_params(arch: str) -> float:
+    """Active (per-token) parameter count — MoE experts scaled by top_k/E."""
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config(arch)
+    shapes = M.flat_table(cfg)
+    total = 0.0
+    for name, (shape, _, _) in shapes.items():
+        n = 1.0
+        for d in shape:
+            n *= d
+        if "|moe/w" in name and cfg.n_experts:
+            n *= cfg.top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape, chips = rec["arch"], rec["shape"], rec["chips"]
+    cc = rec.get("cost_calibrated") or {}
+    flops = cc.get("flops") or rec["cost"]["flops"]
+    mem_bytes = cc.get("bytes") or rec["cost"]["bytes_accessed"]
+    coll = cc.get("collective_bytes_total",
+                  rec.get("collective_bytes_total", 0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    # Optimistic memory floor: params/opt/batch read + outputs written once —
+    # what a fully-fused TPU compile would stream from HBM. The raw HLO
+    # bytes term (above) is the unfused upper bound (CPU-backend compile).
+    mem = rec.get("memory_analysis", {})
+    floor_bytes = (
+        mem.get("argument_size_in_bytes", 0) + mem.get("output_size_in_bytes", 0)
+    ) if mem.get("available") else rec.get("arg_bytes_per_device", 0)
+    t_memory_floor = floor_bytes / HBM_BW
+    terms_opt = {"compute": t_compute, "memory": t_memory_floor,
+                 "collective": t_coll}
+    dominant_opt = max(terms_opt, key=terms_opt.get)
+    n_active = active_params(arch)
+    model_flops = TRAIN_MULT[shape] * n_active * TOKENS[shape] / chips
+    ratio = model_flops / max(flops, 1e-30)
+    # roofline fraction: useful model flops per chip-second at the bound.
+    # Under the *optimistic* memory floor (headline number); the raw-bytes
+    # bound is reported alongside.
+    t_bound = max(terms_opt.values())
+    frac = (model_flops / PEAK_FLOPS) / max(t_bound, 1e-30)
+    frac_raw = (model_flops / PEAK_FLOPS) / max(max(terms.values()), 1e-30)
+    # decode cells are bandwidth-bound by physics: report bandwidth utility
+    # (useful resident bytes touched once / HLO bytes) as their quality metric.
+    bw_utility = floor_bytes / max(mem_bytes, 1e-30)
+    out = {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_floor_s": t_memory_floor, "t_collective_s": t_coll,
+        "dominant": dominant, "dominant_opt": dominant_opt,
+        "model_flops_per_chip": model_flops, "hlo_flops_per_chip": flops,
+        "model_over_hlo": ratio, "roofline_fraction": frac,
+        "roofline_fraction_raw": frac_raw, "bw_utility": bw_utility,
+    }
+    if mem.get("available"):
+        out["hbm_bytes_per_device"] = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+        )
+        out["fits_16gb"] = out["hbm_bytes_per_device"] < 16e9
+    return out
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return recs
+
+
+def build_table(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for rec in load_records(dryrun_dir):
+        if str(rec.get("arch", "")).startswith("hpclust"):
+            continue  # paper-workload cells are analyzed in §Perf directly
+        if not rec.get("cost_calibrated"):
+            # multi-pod records are compile-proof only (uncalibrated scan
+            # costs would yield bogus roofline terms) — single-pod table
+            # per the assignment.
+            continue
+        row = analyze_cell(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def what_moves_it(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["model_over_hlo"] < 0.5:
+            return ("compute-bound with low useful ratio: cut remat recompute "
+                    "/ attention masking waste / MoE dispatch padding")
+        return "compute-bound near-useful: only faster kernels / more chips help"
+    if d == "memory":
+        return ("HBM-bound: fuse/bf16-ify the dominant streams, shard the "
+                "cache/state dims further, raise arithmetic intensity")
+    return ("collective-bound: reshard to cut all-gathers (FSDP prefetch "
+            "overlap), hierarchical reductions, int8 cross-pod compression")
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | mem s (raw/floor) | "
+           "collective s | dominant (raw/opt) | 6ND/HLO | frac | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.2e}/"
+            f"{r['t_memory_floor_s']:.2e} | "
+            f"{r['t_collective_s']:.3e} | {r['dominant']}/{r['dominant_opt']} | "
+            f"{r['model_over_hlo']:.2f} | {r['roofline_fraction']:.2%} | "
+            f"{r.get('fits_16gb', '-')} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    rows = build_table()
+    Path("experiments").mkdir(exist_ok=True)
+    Path("experiments/roofline.json").write_text(json.dumps(rows, indent=1))
+    Path("experiments/roofline.md").write_text(render_markdown(rows))
+    print(render_markdown(rows))
+    for r in rows:
+        print(f"{r['arch']} x {r['shape']}: {what_moves_it(r)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""Benchmark orchestrator. One function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * per paper table: us_per_call = median wall time of the winning algorithm
+    on that row, derived = its relative accuracy eps (%);
+  * kernel rows: FlashAssign interpret-vs-ref timing at several shapes,
+    derived = points/s;
+  * roofline rows (if dry-run artifacts exist): derived = dominant-term
+    seconds per step.
+
+Scale knob: REPRO_BENCH_SCALE (default 0.5 — CPU container).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _rows_table3_4(scale):
+    from benchmarks import tables
+
+    for ds, strat, eps, t in tables.table3_4(n_exec=2, scale=scale):
+        yield (f"table3_strategy_eps/{ds}/{strat}", t * 1e6, eps)
+
+
+def _rows_table5_6(scale):
+    from benchmarks import tables
+
+    for ds, algo, eps, t in tables.table5_6(n_exec=2, scale=scale):
+        yield (f"table5_vs_baselines/{ds}/{algo}", t * 1e6, eps)
+
+
+def _rows_table7_8():
+    from benchmarks import tables
+
+    for m, algo, eps, t in tables.table7_8(max_pow=10, n_exec=1):
+        yield (f"table7_scaling/m{m}/{algo}", t * 1e6, eps)
+
+
+def _rows_kernels():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    for s, k, d in ((4096, 16, 64), (8192, 64, 256)):
+        x = jnp.asarray(rng.normal(size=(s, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        for impl in ("ref",):
+            fn = lambda: ops.assign_clusters(x, c, impl=impl)[0].block_until_ready()
+            fn()
+            t0 = time.time()
+            n = 5
+            for _ in range(n):
+                fn()
+            us = (time.time() - t0) / n * 1e6
+            yield (f"kernel_assign/{impl}/s{s}k{k}d{d}", us, s / (us / 1e6))
+
+
+def _rows_fig3():
+    from benchmarks import tables
+
+    for strat, w, eps, t in tables.fig3_workers(n_exec=1):
+        yield (f"fig3_workers/{strat}/w{w}", t * 1e6, eps)
+
+
+def _rows_roofline():
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.build_table()
+    except Exception as e:  # pragma: no cover
+        print(f"# roofline section unavailable: {e!r}", file=sys.stderr)
+        return
+    for r in rows:
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        yield (
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['dominant']}",
+            t_dom * 1e6,
+            r["roofline_fraction"],
+        )
+
+
+def main() -> None:
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "0.5"))
+    print("name,us_per_call,derived")
+    sections = [
+        _rows_kernels(),
+        _rows_table3_4(scale),
+        _rows_table5_6(scale),
+        _rows_table7_8(),
+        _rows_fig3(),
+        _rows_roofline(),
+    ]
+    for rows in sections:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.4f}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Benchmarks mirroring the paper's tables at CPU scale.
+
+One function per table family:
+  * table3_4  — strategy comparison: relative accuracy eps (%) and
+    convergence time per HPClust strategy (paper Tables 3/4).
+  * table5_6  — HPClust-hybrid vs Forgy K-means vs PBK-BDC: eps and total
+    time (paper Tables 5/6).
+  * table7_8  — scaling experiment over m = 3^7..3^11 with 5% noise
+    (paper Tables 7/8, Figures 4a/4b).
+
+eps = 100 * (f - f*) / f* with f* = best objective observed across all
+algorithms for that (dataset, k) — the paper's convention (its f* is the
+historical best; ours is the run-local best, so eps >= 0 by construction).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HPClust, HPClustConfig
+from repro.core.baselines import forgy_kmeans, pbk_bdc
+from repro.data import gaussian_blobs
+
+STRATEGIES = ("inner", "competitive", "cooperative", "hybrid")
+
+
+def _datasets(scale: float = 1.0):
+    """Synthetic stand-ins spanning the paper's dim/size spectrum."""
+    out = {}
+    for name, (m, n, k, sig) in {
+        "blobs-low-d": (int(20000 * scale), 4, 8, 1.0),
+        "blobs-mid-d": (int(12000 * scale), 32, 5, 2.0),
+        "blobs-high-d": (int(6000 * scale), 128, 5, 3.0),
+    }.items():
+        x, _ = gaussian_blobs(m, n=n, k=k, noise_points=int(m * 0.02),
+                              sigma_max=sig, seed=hash(name) % 1000)
+        out[name] = (x, k)
+    return out
+
+
+def _eps(objs: dict[str, float]) -> dict[str, float]:
+    fstar = min(objs.values())
+    return {a: 100.0 * (f - fstar) / max(fstar, 1e-12) for a, f in objs.items()}
+
+
+def table3_4(n_exec: int = 3, scale: float = 1.0):
+    """Returns rows: (dataset, strategy, eps_med, time_med)."""
+    rows = []
+    for ds, (x, k) in _datasets(scale).items():
+        objs: dict[str, list[float]] = {s: [] for s in STRATEGIES}
+        times: dict[str, list[float]] = {s: [] for s in STRATEGIES}
+        for s in STRATEGIES:
+            workers = 1 if s == "inner" else 4
+            cfg = HPClustConfig(k=k, sample_size=min(1024, len(x) // 4),
+                                workers=workers, rounds=6, strategy=s)
+            for e in range(n_exec):
+                hp = HPClust(cfg, seed=e)
+                t0 = time.time()
+                res = hp.fit(x)
+                dt = time.time() - t0
+                objs[s].append(hp.objective(x, res.centroids))
+                times[s].append(dt)
+        med_obj = {s: float(np.median(v)) for s, v in objs.items()}
+        eps = _eps(med_obj)
+        for s in STRATEGIES:
+            rows.append((ds, s, eps[s], float(np.median(times[s]))))
+    return rows
+
+
+def table5_6(n_exec: int = 3, scale: float = 1.0):
+    """HPClust-hybrid vs Forgy vs PBK-BDC. Rows: (dataset, algo, eps, t)."""
+    rows = []
+    for ds, (x, k) in _datasets(scale).items():
+        objs, times = {}, {}
+        per = {"hpclust-hybrid": [], "forgy": [], "pbk-bdc": []}
+        pert = {a: [] for a in per}
+        for e in range(n_exec):
+            cfg = HPClustConfig(k=k, sample_size=min(1024, len(x) // 4),
+                                workers=4, rounds=6, strategy="hybrid")
+            hp = HPClust(cfg, seed=e)
+            t0 = time.time(); r = hp.fit(x)
+            pert["hpclust-hybrid"].append(time.time() - t0)
+            per["hpclust-hybrid"].append(hp.objective(x, r.centroids))
+            t0 = time.time(); fb = forgy_kmeans(x, k, seed=e)
+            pert["forgy"].append(time.time() - t0)
+            per["forgy"].append(fb.objective)
+            t0 = time.time(); pb = pbk_bdc(x, k, segment_size=2048, seed=e)
+            pert["pbk-bdc"].append(time.time() - t0)
+            per["pbk-bdc"].append(pb.objective)
+        med = {a: float(np.median(v)) for a, v in per.items()}
+        eps = _eps(med)
+        for a in per:
+            rows.append((ds, a, eps[a], float(np.median(pert[a]))))
+    return rows
+
+
+def table7_8(max_pow: int = 11, n_exec: int = 2):
+    """Scaling: m = 3^7 .. 3^max_pow, 10-dim, 10 blobs, 500 noise points.
+    Rows: (m, algo, eps, t)."""
+    rows = []
+    for i in range(7, max_pow + 1):
+        m = 3 ** i
+        x, _ = gaussian_blobs(m, n=10, k=10, noise_points=500, seed=i)
+        per = {"hpclust-hybrid": [], "hpclust-competitive": [], "forgy": [],
+               "pbk-bdc": []}
+        pert = {a: [] for a in per}
+        s = min(5000, max(512, m - 1000))
+        for e in range(n_exec):
+            for strat in ("hybrid", "competitive"):
+                cfg = HPClustConfig(k=10, sample_size=min(s, len(x) // 2),
+                                    workers=4, rounds=6, strategy=strat)
+                hp = HPClust(cfg, seed=e)
+                t0 = time.time(); r = hp.fit(x)
+                pert[f"hpclust-{strat}"].append(time.time() - t0)
+                per[f"hpclust-{strat}"].append(hp.objective(x, r.centroids))
+            t0 = time.time(); fb = forgy_kmeans(x, 10, seed=e)
+            pert["forgy"].append(time.time() - t0)
+            per["forgy"].append(fb.objective)
+            t0 = time.time(); pb = pbk_bdc(x, 10, segment_size=4096, seed=e)
+            pert["pbk-bdc"].append(time.time() - t0)
+            per["pbk-bdc"].append(pb.objective)
+        med = {a: float(np.median(v)) for a, v in per.items()}
+        eps = _eps(med)
+        for a in per:
+            rows.append((m, a, eps[a], float(np.median(pert[a]))))
+    return rows
+
+
+def fig3_workers(n_exec: int = 2, workers=(1, 2, 4, 8)):
+    """Figure 3 analogue: accuracy/time vs worker count (the paper's CPU
+    count). Rows: (strategy, W, eps, t)."""
+    x, _ = gaussian_blobs(16000, n=16, k=8, noise_points=200, seed=11)
+    rows = []
+    objs_all = {}
+    times_all = {}
+    for strat in ("competitive", "cooperative"):
+        for w in workers:
+            key = (strat, w)
+            objs, times = [], []
+            for e in range(n_exec):
+                cfg = HPClustConfig(k=8, sample_size=1024, workers=w,
+                                    rounds=6, strategy=strat)
+                hp = HPClust(cfg, seed=e)
+                t0 = time.time()
+                r = hp.fit(x)
+                times.append(time.time() - t0)
+                objs.append(hp.objective(x, r.centroids))
+            objs_all[key] = float(np.median(objs))
+            times_all[key] = float(np.median(times))
+    fstar = min(objs_all.values())
+    for key, obj in objs_all.items():
+        rows.append((key[0], key[1], 100 * (obj - fstar) / fstar,
+                     times_all[key]))
+    return rows

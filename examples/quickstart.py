@@ -1,0 +1,36 @@
+"""Quickstart: cluster gaussian blobs with HPClust and compare strategies.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import HPClust, HPClustConfig
+from repro.core.baselines import forgy_kmeans
+from repro.data import gaussian_blobs
+
+
+def main():
+    x, centers = gaussian_blobs(20000, n=10, k=10, noise_points=500, seed=0)
+    print(f"dataset: {x.shape[0]} points, {x.shape[1]} dims, k=10")
+
+    results = {}
+    for strategy in ("inner", "competitive", "cooperative", "hybrid"):
+        cfg = HPClustConfig(
+            k=10, sample_size=2048, workers=1 if strategy == "inner" else 4,
+            rounds=6, strategy=strategy,
+        )
+        hp = HPClust(cfg, seed=0)
+        res = hp.fit(x)
+        results[strategy] = hp.objective(x, res.centroids)
+
+    fb = forgy_kmeans(x, 10, seed=0)
+    results["forgy-kmeans"] = fb.objective
+
+    best = min(results.values())
+    print(f"\n{'algorithm':16s} {'objective':>14s} {'eps %':>8s}")
+    for name, obj in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"{name:16s} {obj:14.1f} {100*(obj-best)/best:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

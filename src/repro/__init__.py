@@ -1,0 +1,3 @@
+"""repro: HPClust (MSSC-ITD) as a production multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,34 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``smoke=True``
+returns the reduced same-family config used by the CPU smoke tests. The
+paper's own clustering deployments live in ``hpclust_prod``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "gemma3-4b",
+    "qwen3-0.6b",
+    "qwen1.5-110b",
+    "starcoder2-3b",
+    "deepseek-v3-671b",
+    "qwen3-moe-30b-a3b",
+    "zamba2-7b",
+    "xlstm-1.3b",
+    "whisper-medium",
+    "llava-next-34b",
+)
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, smoke: bool = False):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    m = _module(name)
+    return m.SMOKE if smoke else m.CONFIG

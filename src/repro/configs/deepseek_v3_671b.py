@@ -1,0 +1,30 @@
+"""deepseek-v3-671b [moe]: 61L (3 dense + 58 MoE), MLA, 1 shared + 256
+routed top-8 (sigmoid router, aux-free bias), MTP-1. [arXiv:2412.19437; hf].
+
+d_ff=2048 is the per-expert (routed) width; dense layers use 4x d_ff_moe
+x 2.25 = 18432 (published intermediate size). Optimizer: adafactor —
+AdamW fp32 state for 671B exceeds 512x16 GB (DESIGN.md SS4)."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_ff=18432,
+    vocab_size=129280,
+    n_experts=256, n_shared_experts=1, top_k=8, d_ff_moe=2048,
+    n_dense_layers=3, router_type="sigmoid", capacity_factor=1.25,
+    mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_rope_dim=64, qk_nope_dim=128, v_head_dim=128,
+    mtp_depth=1, tie_embeddings=False, optimizer="adafactor",
+    grad_accum=8, grad_dtype="bfloat16",
+    dtype="bfloat16", q_chunk=64,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="deepseek-v3-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab_size=512, n_experts=8, top_k=2,
+    d_ff_moe=32, n_dense_layers=1, capacity_factor=4.0, q_lora_rank=32, kv_lora_rank=16,
+    qk_rope_dim=8, qk_nope_dim=16, v_head_dim=16, q_chunk=32,
+    dtype="float32",
+)

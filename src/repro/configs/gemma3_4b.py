@@ -1,0 +1,19 @@
+"""gemma3-4b [dense]: 34L, GQA 8H/4KV, 5:1 local:global (window 1024),
+vocab 262144. [hf:google/gemma-3-*; unverified]. head_dim = d/h = 320."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, d_ff=10240,
+    vocab_size=262144,
+    local_ratio=5, window=1024, rope_theta=1e6, grad_accum=8,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="gemma3-4b-smoke", n_layers=6, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, window=16, q_chunk=32,
+    dtype="float32",
+)

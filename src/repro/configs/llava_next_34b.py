@@ -1,0 +1,21 @@
+"""llava-next-34b [vlm]: 60L dense backbone (GQA 56H/8KV); anyres vision
+tiling is a STUB: input_specs() supplies 1024 precomputed patch embeddings
+per example, concatenated before the backbone (DESIGN.md SS5).
+[hf:llava-hf/llava-v1.6-*; unverified]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=20480,
+    vocab_size=64000, rope_theta=5e6, img_tokens=1024, grad_accum=8,
+    q_chunk=128,
+    tie_embeddings=False, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llava-smoke", n_layers=4, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=128, vocab_size=512, img_tokens=8, q_chunk=32,
+    dtype="float32",
+)

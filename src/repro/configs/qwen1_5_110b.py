@@ -1,0 +1,17 @@
+"""qwen1.5-110b [dense]: 80L, GQA 64H/8KV, QKV bias. [hf:Qwen/Qwen1.5-*; hf]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=49152,
+    vocab_size=152064, qkv_bias=True, rope_theta=1e6,
+    grad_accum=8, optimizer="adafactor", q_chunk=128,
+    tie_embeddings=False, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="qwen1.5-110b-smoke", n_layers=4, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=192, vocab_size=512, q_chunk=32, dtype="float32",
+)

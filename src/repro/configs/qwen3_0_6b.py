@@ -1,0 +1,16 @@
+"""qwen3-0.6b [dense]: 28L, GQA 16H/8KV, qk_norm. [hf:Qwen/Qwen3-*; hf]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_ff=3072,
+    vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="qwen3-0.6b-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, q_chunk=32, dtype="float32",
+)

@@ -1,0 +1,20 @@
+"""qwen3-moe-30b-a3b [moe]: 48L, GQA 32H/4KV, 128 experts top-8, qk_norm.
+d_ff=768 is the per-expert width. [hf:Qwen/Qwen3-30B-A3B; hf]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, d_ff=6144,
+    vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    n_experts=128, top_k=8, d_ff_moe=768, n_dense_layers=0,
+    router_type="softmax", capacity_factor=1.25, grad_accum=8,
+    tie_embeddings=False, dtype="bfloat16", head_dim=128,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="qwen3-moe-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=512, n_experts=8, top_k=2,
+    d_ff_moe=32, capacity_factor=4.0, q_chunk=32, head_dim=16, dtype="float32",
+)

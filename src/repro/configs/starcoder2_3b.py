@@ -1,0 +1,16 @@
+"""starcoder2-3b [dense]: 30L, GQA 24H/2KV, RoPE. [arXiv:2402.19173; hf]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, d_ff=12288,
+    vocab_size=49152, rope_theta=1e5, grad_accum=8, q_chunk=256,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="starcoder2-3b-smoke", n_layers=4, d_model=48, n_heads=6,
+    n_kv_heads=2, d_ff=96, vocab_size=512, q_chunk=32, dtype="float32",
+)

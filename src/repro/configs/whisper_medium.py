@@ -1,0 +1,20 @@
+"""whisper-medium [audio enc-dec]: 24+24L, d=1024, 16H, d_ff=4096,
+vocab 51865. Conv frontend is a STUB: input_specs() supplies precomputed
+frame embeddings (B, S, d); decoder length = S // dec_ratio (DESIGN.md SS5).
+[arXiv:2212.04356; unverified]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51865, dec_ratio=8, grad_accum=4,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="whisper-smoke", n_layers=2, enc_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=512, q_chunk=32,
+    dtype="float32",
+)

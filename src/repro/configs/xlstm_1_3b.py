@@ -1,0 +1,18 @@
+"""xlstm-1.3b [ssm]: 48 blocks, 7:1 mLSTM:sLSTM, 4 heads, d_ff=0 (all
+projections inside the blocks). [arXiv:2405.04517; unverified]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, slstm_every=8, ssm_chunk=256, grad_accum=8,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="xlstm-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=4, vocab_size=512, slstm_every=2, ssm_chunk=16,
+    q_chunk=32, dtype="float32",
+)

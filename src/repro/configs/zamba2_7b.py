@@ -1,0 +1,21 @@
+"""zamba2-7b [hybrid]: 81 Mamba2 blocks (d_state 64) with a weight-shared
+attention block every 6th position. Per-invocation LoRA deltas on the shared
+block are omitted (DESIGN.md SS5). [arXiv:2411.15242; unverified]."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128, attn_every=6,
+    grad_accum=8,
+    tie_embeddings=True, dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="zamba2-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab_size=512, ssm_state=16, ssm_chunk=16,
+    attn_every=4, q_chunk=32, dtype="float32",
+)

@@ -1,0 +1,10 @@
+"""HPClust core: the paper's contribution as composable JAX modules.
+
+Submodules: kmeans, kmeanspp, strategies, hpclust, baselines, sharded.
+(Function names are not re-exported at package level to avoid shadowing the
+submodule names.)
+"""
+from repro.core.hpclust import HPClust, HPClustResult
+from repro.core.strategies import HPClustConfig, WorkerState, best_of
+
+__all__ = ["HPClust", "HPClustResult", "HPClustConfig", "WorkerState", "best_of"]

@@ -1,0 +1,129 @@
+"""Public HPClust API: fit arrays, fit infinite streams, assign big data.
+
+``HPClust`` is the user-facing estimator; ``fit_stream`` implements the
+MSSC-ITD semantics the paper introduces: the algorithm never assumes X fits
+anywhere — it consumes a window iterator (the "infinitely tall" stream),
+keeps a device-resident reservoir window, and carries worker incumbents
+across windows. More rounds / more windows can only improve the incumbent
+(keep-the-best), which is the paper's central monotonicity property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import strategies
+from repro.core.strategies import HPClustConfig, WorkerState
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+class HPClustResult(NamedTuple):
+    centroids: np.ndarray       # (k, d)
+    objective: float            # best incumbent sample objective
+    history: np.ndarray         # (rounds_total, W) incumbent objective per round
+    state: WorkerState          # final worker states (for warm restarts)
+
+
+@dataclasses.dataclass
+class HPClust:
+    """Estimator wrapper around the compiled strategy engine."""
+
+    config: HPClustConfig
+    seed: int = 0
+
+    def fit(self, x: np.ndarray | Array) -> HPClustResult:
+        """Cluster a (m, d) window (single-shot MSSC)."""
+        key = jax.random.PRNGKey(self.seed)
+        data = jnp.asarray(x, jnp.float32)
+        state, metrics = jax.jit(
+            strategies.run_hpclust, static_argnames=("cfg",)
+        )(key, data, cfg=self.config)
+        c, obj = strategies.best_of(state)
+        return HPClustResult(
+            centroids=np.asarray(c),
+            objective=float(obj),
+            history=np.asarray(metrics.best_obj),
+            state=state,
+        )
+
+    def fit_stream(
+        self,
+        windows: Iterable[np.ndarray],
+        *,
+        rounds_per_window: int | None = None,
+    ) -> HPClustResult:
+        """MSSC-ITD: consume successive stream windows, carrying incumbents.
+
+        Each window is a (m_w, d) array (m_w may vary; it is the reservoir
+        the host has streamed in). Worker incumbents, objectives and PRNG
+        state persist across windows — the algorithm behaves as if it sampled
+        one infinite dataset.
+        """
+        cfg = self.config
+        rpw = rounds_per_window or cfg.rounds
+        run_cfg = dataclasses.replace(cfg, rounds=rpw)
+        key = jax.random.PRNGKey(self.seed)
+        state: WorkerState | None = None
+        hist = []
+        run = jax.jit(_run_from_state, static_argnames=("cfg",))
+        for wi, window in enumerate(windows):
+            data = jnp.asarray(window, jnp.float32)
+            if state is None:
+                key, k0 = jax.random.split(key)
+                state = strategies.init_state(k0, run_cfg, data.shape[1])
+            state, metrics = run(state, data, cfg=run_cfg)
+            del wi
+            hist.append(np.asarray(metrics.best_obj))
+        if state is None:
+            raise ValueError("empty stream")
+        c, obj = strategies.best_of(state)
+        return HPClustResult(
+            centroids=np.asarray(c),
+            objective=float(obj),
+            history=np.concatenate(hist, axis=0),
+            state=state,
+        )
+
+    def assign(
+        self, x: np.ndarray | Array, centroids: np.ndarray | Array,
+        *, batch: int = 1 << 16,
+    ) -> np.ndarray:
+        """Final full-dataset assignment (paper SS3 last step), batched."""
+        c = jnp.asarray(centroids, jnp.float32)
+        fn = jax.jit(lambda xb: ops.assign_clusters(xb, c, impl=self.config.impl)[0])
+        out = []
+        x = np.asarray(x, np.float32)
+        for i in range(0, len(x), batch):
+            out.append(np.asarray(fn(jnp.asarray(x[i : i + batch]))))
+        return np.concatenate(out) if out else np.zeros((0,), np.int32)
+
+    def objective(self, x, centroids, *, batch: int = 1 << 16) -> float:
+        """f(C, X) over a full dataset, streamed in batches."""
+        c = jnp.asarray(centroids, jnp.float32)
+        fn = jax.jit(lambda xb: ops.mssc_objective(xb, c, impl=self.config.impl))
+        x = np.asarray(x, np.float32)
+        total = 0.0
+        for i in range(0, len(x), batch):
+            total += float(fn(jnp.asarray(x[i : i + batch])))
+        return total
+
+
+def _run_from_state(state: WorkerState, data: Array, *, cfg: HPClustConfig):
+    """run_rounds, jit-friendly keyword-static wrapper."""
+    return strategies.run_rounds(state, data, cfg)
+
+
+def stream_from_generator(
+    gen: Iterator[np.ndarray], max_windows: int
+) -> Iterable[np.ndarray]:
+    """Utility: cap an infinite generator at max_windows windows."""
+    for i, w in enumerate(gen):
+        if i >= max_windows:
+            return
+        yield w

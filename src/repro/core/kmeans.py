@@ -1,0 +1,108 @@
+"""Lloyd's K-means local search (Algorithm 1's iterative core), in JAX.
+
+This is the inner optimizer every HPClust worker applies to each sample
+(paper SS3). Stopping rule follows the paper's SS6.5: at most ``max_iters``
+iterations (300 in the paper) or relative objective improvement below ``tol``
+(1e-4 in the paper).
+
+Two loop flavours:
+  * ``kmeans``        — ``lax.while_loop`` with true early exit (host/vmap path).
+  * ``kmeans_fixed``  — ``lax.fori_loop`` with a fixed trip count and
+    convergence-masked updates. Used by the shard_map'd distributed path: a
+    static schedule keeps every device of a worker group on the same
+    iteration count, which makes the SPMD program uniform and the collective
+    schedule static (TPU adaptation; see DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    centroids: Array  # (k, d) f32
+    objective: Array  # () f32 — f(C, S) under the returned centroids
+    counts: Array     # (k,) f32 cluster sizes under the returned centroids
+    iterations: Array # () int32
+
+
+def lloyd_iteration(x: Array, c: Array, *, impl: str | None = None):
+    """One assign+update step.
+
+    Returns (new_c, obj_under_c, counts, degenerate_mask). Empty clusters
+    keep their previous centroid and are flagged degenerate (paper SS3 re-seeds
+    them with K-means++ at the *next* sample).
+    """
+    k = c.shape[0]
+    idx, dist = ops.assign_clusters(x, c, impl=impl)
+    sums, counts = ops.cluster_sums(x, idx, k, impl=impl)
+    degenerate = counts == 0
+    new_c = jnp.where(
+        degenerate[:, None],
+        c.astype(jnp.float32),
+        sums / jnp.maximum(counts, 1.0)[:, None],
+    )
+    return new_c, jnp.sum(dist), counts, degenerate
+
+
+def kmeans(
+    x: Array,
+    c0: Array,
+    *,
+    max_iters: int = 300,
+    tol: float = 1e-4,
+    impl: str | None = None,
+) -> KMeansResult:
+    """Lloyd iterations with early exit on relative improvement < tol."""
+
+    def cond(state):
+        _, prev_obj, obj, it = state
+        # Relative-improvement test on the *current* objective so the inf
+        # sentinel in prev_obj can't poison the threshold (inf - x > inf is
+        # False, which would exit after one iteration).
+        improving = (prev_obj - obj) > tol * jnp.maximum(obj, 1e-30)
+        return jnp.logical_and(it < max_iters, improving)
+
+    def body(state):
+        c, _, obj, it = state
+        new_c, obj_under_c, _, _ = lloyd_iteration(x, c, impl=impl)
+        return new_c, obj, obj_under_c, it + 1
+
+    c0 = c0.astype(jnp.float32)
+    # Prime the loop with one real iteration so `obj` is meaningful.
+    c1, obj0, _, _ = lloyd_iteration(x, c0, impl=impl)
+    c, _, _, iters = jax.lax.while_loop(cond, body, (c1, jnp.inf, obj0, jnp.int32(1)))
+    # Final stats under the returned centroids (what the incumbent compare uses).
+    _, obj, counts, _ = lloyd_iteration(x, c, impl=impl)
+    return KMeansResult(c, obj, counts, iters)
+
+
+def kmeans_fixed(
+    x: Array,
+    c0: Array,
+    *,
+    iters: int = 32,
+    tol: float = 1e-4,
+    impl: str | None = None,
+) -> KMeansResult:
+    """Fixed-trip-count Lloyd with convergence masking (static SPMD schedule)."""
+
+    def body(_, state):
+        c, prev_obj, done = state
+        new_c, obj, _, _ = lloyd_iteration(x, c, impl=impl)
+        improved = (prev_obj - obj) > tol * jnp.maximum(obj, 1e-30)
+        now_done = jnp.logical_or(done, jnp.logical_not(improved))
+        c = jnp.where(done, c, new_c)
+        prev_obj = jnp.where(done, prev_obj, obj)
+        return c, prev_obj, now_done
+
+    c0 = c0.astype(jnp.float32)
+    c, _, _ = jax.lax.fori_loop(0, iters, body, (c0, jnp.inf, jnp.bool_(False)))
+    _, obj, counts, _ = lloyd_iteration(x, c, impl=impl)
+    return KMeansResult(c, obj, counts, jnp.int32(iters))

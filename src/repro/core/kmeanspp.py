@@ -1,0 +1,111 @@
+"""K-means++ seeding and degenerate-cluster re-seeding (paper SS3, SS6.5).
+
+The paper's K-means++ samples each new centroid by D^2-weighting with
+``n_candidates = 3`` greedy candidates (SS6.5, following sklearn/Arthur &
+Vassilvitskii's greedy variant): draw 3 candidates proportional to the
+current nearest-centroid distances, keep the one that lowers the potential
+most.
+
+``reseed_degenerate`` generalizes the same primitive: given a centroid set
+with a boolean mask of degenerate (empty) clusters, re-draw exactly the
+masked rows by D^2 sampling against the *live* rows. K-means++ from scratch
+is the special case where every row is masked — which is exactly how HPClust
+initializes round 0 (Algorithms 3-5 start with "all centroids degenerate").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _sq_dists_to_point(x: Array, p: Array) -> Array:
+    diff = x.astype(jnp.float32) - p.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _draw_candidates(key: Array, weights: Array, n: int) -> Array:
+    """n categorical draws with prob ∝ weights, via the Gumbel-max trick.
+
+    Gumbel-max keeps the same mechanism usable in the sharded path (a global
+    argmax over device shards == a global categorical draw), so the host and
+    distributed implementations are bit-comparable in structure.
+    """
+    logits = jnp.log(jnp.maximum(weights, 1e-30))
+    g = jax.random.gumbel(key, (n,) + weights.shape, dtype=jnp.float32)
+    return jnp.argmax(logits[None, :] + g, axis=-1)
+
+
+def reseed_degenerate(
+    key: Array,
+    x: Array,
+    c: Array,
+    mask: Array,
+    *,
+    n_candidates: int = 3,
+) -> Array:
+    """Replace masked centroid rows by greedy D^2-sampled points of ``x``.
+
+    Args:
+      key: PRNG key.
+      x: (s, d) sample.
+      c: (k, d) current centroids (masked rows' values are ignored).
+      mask: (k,) bool — True rows are degenerate and get re-drawn.
+    Returns:
+      (k, d) f32 centroids with masked rows replaced.
+    """
+    s = x.shape[0]
+    k = c.shape[0]
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    # mind_i = distance to the nearest *live* centroid; all-masked => uniform.
+    d2 = (
+        jnp.sum(xf * xf, axis=1, keepdims=True)
+        - 2.0 * xf @ cf.T
+        + jnp.sum(cf * cf, axis=1)[None, :]
+    )  # (s, k)
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(mask[None, :], jnp.inf, d2)
+    mind = jnp.min(d2, axis=1)
+    mind = jnp.where(jnp.isinf(mind), 1.0, mind)  # no live centroid yet
+
+    def body(j, state):
+        cc, mind, key = state
+        key, kd = jax.random.split(key)
+
+        def redraw(args):
+            cc, mind, kd = args
+            cand_idx = _draw_candidates(kd, mind, n_candidates)  # (L,)
+            cands = xf[cand_idx]  # (L, d)
+            cand_d2 = jax.vmap(lambda p: _sq_dists_to_point(xf, p))(cands)  # (L, s)
+            new_minds = jnp.minimum(mind[None, :], cand_d2)  # (L, s)
+            potentials = jnp.sum(new_minds, axis=1)  # (L,)
+            best = jnp.argmin(potentials)
+            cc = cc.at[j].set(cands[best])
+            return cc, new_minds[best]
+
+        def keep(args):
+            cc, mind, _ = args
+            # Live centroid: fold its own distance into mind so subsequent
+            # draws are D^2 w.r.t. the full live set (matters when the
+            # initial mask was all-True: rows seeded earlier become live).
+            return cc, jnp.minimum(mind, _sq_dists_to_point(xf, cc[j]))
+
+        cc, mind = jax.lax.cond(mask[j], redraw, keep, (cc, mind, kd))
+        return cc, mind, key
+
+    # For a from-scratch init (all masked), mind against "live" rows is the
+    # uniform vector above, so row 0 is a uniform draw — exactly k-means++.
+    cc, _, _ = jax.lax.fori_loop(0, k, body, (cf, mind, key))
+    return cc
+
+
+def kmeanspp(key: Array, x: Array, k: int, *, n_candidates: int = 3) -> Array:
+    """Greedy K-means++ seeding of k centroids from sample x (s, d)."""
+    d = x.shape[1]
+    c = jnp.zeros((k, d), jnp.float32)
+    return reseed_degenerate(
+        key, x, c, jnp.ones((k,), jnp.bool_), n_candidates=n_candidates
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import gaussian_blobs, blob_stream, token_batches
+
+__all__ = ["gaussian_blobs", "blob_stream", "token_batches"]

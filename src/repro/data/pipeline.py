@@ -1,0 +1,95 @@
+"""Data pipeline: synthetic clustering streams + LM token batches.
+
+Clustering side (the paper's workload):
+  * ``gaussian_blobs``   — the scaling-experiment generator (SS6.8): 10-dim,
+    10 blobs uniform in (-40,40)^n, per-blob sigma ~ U(0,10), plus 500
+    uniform noise points in (-50,50)^n.
+  * ``blob_stream``      — an infinite window generator over the same
+    distribution: the MSSC-ITD "infinitely tall" data source.
+
+LM side:
+  * ``token_batches``    — synthetic Zipf-distributed token streams with a
+    background prefetch thread (double buffering), matching the batch
+    structure of ``launch/steps.py``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+
+def gaussian_blobs(
+    m: int,
+    *,
+    n: int = 10,
+    k: int = 10,
+    noise_points: int = 500,
+    box: float = 40.0,
+    sigma_max: float = 10.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (X (m+noise, n) f32, true_centers (k, n))."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-box, box, size=(k, n))
+    sigmas = rng.uniform(0.0, sigma_max, size=(k,))
+    counts = np.full((k,), m // k)
+    counts[: m % k] += 1
+    parts = [
+        centers[j] + sigmas[j] * rng.standard_normal((counts[j], n))
+        for j in range(k)
+    ]
+    if noise_points:
+        parts.append(rng.uniform(-box - 10, box + 10, size=(noise_points, n)))
+    x = np.concatenate(parts).astype(np.float32)
+    rng.shuffle(x)
+    return x, centers.astype(np.float32)
+
+
+def blob_stream(
+    window: int,
+    *,
+    n: int = 10,
+    k: int = 10,
+    noise_frac: float = 0.05,
+    seed: int = 0,
+) -> Iterator[np.ndarray]:
+    """Infinite stream of (window, n) arrays from a FIXED blob distribution —
+    the MSSC-ITD source: same mixture, unbounded rows."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-40, 40, size=(k, n))
+    sigmas = rng.uniform(0.0, 10.0, size=(k,))
+    while True:
+        comp = rng.integers(0, k, size=window)
+        x = centers[comp] + sigmas[comp, None] * rng.standard_normal((window, n))
+        n_noise = int(window * noise_frac)
+        if n_noise:
+            idx = rng.choice(window, n_noise, replace=False)
+            x[idx] = rng.uniform(-50, 50, size=(n_noise, n))
+        yield x.astype(np.float32)
+
+
+def token_batches(
+    vocab: int,
+    batch: int,
+    seq: int,
+    *,
+    seed: int = 0,
+    zipf_a: float = 1.2,
+    prefetch: int = 2,
+) -> Iterator[dict]:
+    """Infinite {'tokens': (B, S) int32} batches, prefetched on a thread."""
+
+    def gen(q: queue.Queue):
+        rng = np.random.default_rng(seed)
+        while True:
+            t = rng.zipf(zipf_a, size=(batch, seq)).astype(np.int64)
+            t = np.minimum(t - 1, vocab - 1).astype(np.int32)
+            q.put({"tokens": t})
+
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    threading.Thread(target=gen, args=(q,), daemon=True).start()
+    while True:
+        yield q.get()

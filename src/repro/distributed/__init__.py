@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    logical_rules, param_shardings, batch_sharding, batch_spec,
+    cache_sharding, dp_axes, dedupe_spec,
+)
+
+__all__ = [
+    "logical_rules", "param_shardings", "batch_sharding", "batch_spec",
+    "cache_sharding", "dp_axes", "dedupe_spec",
+]

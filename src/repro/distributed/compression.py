@@ -1,0 +1,70 @@
+"""Gradient compression for cross-pod reductions: int8 + error feedback.
+
+On the 2x16x16 mesh, intra-pod gradient reduction rides 50 GB/s ICI links
+but the cross-pod hop is the slow tier. The standard mitigation is lossy
+compression with error feedback (EF-SGD): quantize (grad + carried error)
+to int8 with a per-tensor scale, exchange the int8 payload (4x fewer
+bytes), and carry the quantization residual into the next step, which keeps
+the long-run bias at zero.
+
+``compressed_psum`` is built for shard_map code: it all-gathers the int8
+payloads over the named axis and sums after dequantization (summing int8
+pre-reduction would overflow; gather+local-sum keeps the wire format int8,
+which is where the 4x saving lives).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    error: Array  # carried quantization residual, f32, same shape as grad
+
+
+def ef_init(shape) -> EFState:
+    return EFState(jnp.zeros(shape, jnp.float32))
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(x: Array, state: EFState) -> tuple[Array, EFState]:
+    """Single-node EF round-trip (what each participant applies locally)."""
+    v = x.astype(jnp.float32) + state.error
+    q, s = quantize_int8(v)
+    deq = dequantize_int8(q, s)
+    return deq, EFState(v - deq)
+
+
+def compressed_psum(x: Array, axis: str, state: EFState) -> tuple[Array, EFState]:
+    """EF int8 all-gather-sum over a named axis (use inside shard_map).
+
+    Wire bytes: size(x)/4 + one f32 scale per participant, vs size(x) for a
+    ring all-reduce of f32.
+    """
+    v = x.astype(jnp.float32) + state.error
+    q, s = quantize_int8(v)
+    deq_local = dequantize_int8(q, s)
+    new_state = EFState(v - deq_local)
+    qs = jax.lax.all_gather(q, axis)          # int8 payload on the wire
+    ss = jax.lax.all_gather(s, axis)
+    total = jnp.sum(
+        qs.astype(jnp.float32)
+        * ss.reshape((-1,) + (1,) * (qs.ndim - 1)),
+        axis=0,
+    )
+    return total, new_state

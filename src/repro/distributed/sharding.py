@@ -1,0 +1,144 @@
+"""Logical-axis -> mesh-axis rules (DP / FSDP / TP / EP / SP).
+
+Parameter tables tag every dim with a logical axis; these rules map them to
+the production mesh:
+
+  vocab, heads, kv_heads, mlp, experts  -> "model"  (tensor / expert parallel)
+  embed                                 -> "data" (single-pod) or
+                                           ("pod","data") (multi-pod) — FSDP
+  layers                                -> unsharded (scan axis)
+
+Duplicate mesh axes inside one PartitionSpec are illegal; when a weight's
+dims map to the same axis twice (e.g. expert FFN (experts, embed, mlp) ->
+(model, data, model)), later occurrences are dropped (kept None) — the first
+axis wins, which empirically keeps the larger dim sharded.
+
+Batch/activation specs: tokens are sharded over ("pod","data") (DP). For
+batch=1 long-context decode the KV cache sequence dim is sharded over
+"data" instead (sequence parallelism); see cache_specs().
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def logical_rules(mesh: Mesh) -> dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    fsdp = ("pod", "data") if multi_pod else "data"
+    return {
+        "vocab": "model",
+        "embed": fsdp,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+    }
+
+
+def dedupe_spec(spec: P) -> P:
+    seen: set[str] = set()
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        keep = tuple(a for a in axes if a not in seen)
+        seen.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    return P(*out)
+
+
+def _drop_indivisible(spec: P, shape, mesh: Mesh) -> P:
+    """Replicate dims whose size isn't divisible by their mesh axes (jit
+    input shardings require exact divisibility — e.g. whisper's vocab 51865)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_shardings(cfg, mesh: Mesh) -> dict[str, NamedSharding]:
+    from repro.models import model as M
+
+    rules = logical_rules(mesh)
+    specs = M.param_specs(cfg, rules)
+    shapes = M.param_shapes(cfg)
+    return {
+        k: NamedSharding(
+            mesh, _drop_indivisible(dedupe_spec(s), shapes[k].shape, mesh)
+        )
+        for k, s in specs.items()
+    }
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(dp_axes(mesh), *()))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def cache_sharding(cfg, mesh: Mesh, cache, *, seq_parallel: bool) -> Any:
+    """Shardings matching the init_cache pytree (leading dim = segment stack).
+
+    Greedy, divisibility-checked policy:
+      1. batch dim (index 1) over the DP axes when divisible;
+      2. seq_parallel (batch=1 long-context): dim 2 — the cache sequence/
+         state dim — over "data" when divisible (sequence parallelism);
+      3. otherwise the largest remaining dim over "model" when divisible
+         (keeps e.g. the mLSTM (H, hd, hd) matrix memory distributed).
+    """
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    data_size = mesh.shape["data"]
+    model_size = mesh.shape["model"]
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        axes: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size == 0 and shape[1] > 0:
+            axes[1] = dp
+        elif seq_parallel and len(shape) >= 3 and shape[2] % data_size == 0:
+            # batch=1 long-context: sequence over `data` (SP)
+            axes[2] = "data"
+        # Shard the trailing feature dim over `model` (Megatron-style decode:
+        # scores psum over hd shards; ctx/wo stay row-sharded). Sharding the
+        # *sequence* dim instead forces a full cache re-layout around every
+        # dynamic_update_slice (observed +15 GB/device on qwen1.5 decode).
+        if len(shape) >= 3 and shape[-1] % model_size == 0 \
+                and shape[-1] >= 2 * model_size:
+            axes[-1] = "model"
+        if all(a is None for a in axes) and len(shape) >= 2:
+            # nothing sharded yet: largest dim over model if divisible
+            order = sorted(range(1, len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if shape[i] % model_size == 0 and shape[i] >= model_size:
+                    axes[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(spec_for, cache)

@@ -1,0 +1,3 @@
+from repro.kernels.ops import assign_clusters, cluster_sums, lloyd_pass, mssc_objective
+
+__all__ = ["assign_clusters", "cluster_sums", "lloyd_pass", "mssc_objective"]

@@ -1,0 +1,118 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+``impl`` resolution:
+  - "pallas":    compiled TPU kernel (requires a TPU backend).
+  - "interpret": Pallas interpret mode — used by the CPU test suite.
+  - "ref":       the jnp oracle (what XLA lowers on CPU / in dry-runs).
+  - None/"auto": "pallas" on TPU, "ref" elsewhere.
+
+The wrappers own all padding so the kernels can assume hardware-aligned
+tiles: S is padded with junk rows (sliced off), D with zero columns (no-op in
+dot products), K with +inf-norm centroids (can never win an argmin) /
+out-of-range assignments (fall outside every one-hot tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.assign import assign_pallas
+from repro.kernels.update import cluster_sums_pallas
+
+Array = jax.Array
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def resolve_impl(impl: str | None) -> str:
+    if impl in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl
+
+
+def _round_up(v: int, m: int) -> int:
+    return v + (-v) % m
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def assign_clusters(x: Array, c: Array, *, impl: str | None = None) -> tuple[Array, Array]:
+    """Nearest-centroid assignment: x (s,d), c (k,d) -> (idx (s,), dist (s,))."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.assign_ref(x, c)
+    s, d = x.shape
+    k = c.shape[0]
+    bs = min(256, _round_up(s, _SUBLANE))
+    bk = min(128, _round_up(k, _LANE))
+    bd = min(512, _round_up(d, _LANE))
+    sp, kp, dp = _round_up(s, bs), _round_up(k, bk), _round_up(d, bd)
+    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+    cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
+    idx, dist = assign_pallas(
+        xp, cp, k_valid=k, block_s=bs, block_k=bk, block_d=bd,
+        interpret=(impl == "interpret"),
+    )
+    return idx[:s], dist[:s]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def cluster_sums(x: Array, idx: Array, k: int, *, impl: str | None = None) -> tuple[Array, Array]:
+    """Per-cluster sums (k,d) and counts (k,) from assignments idx (s,)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.cluster_sums_ref(x, idx, k)
+    s, d = x.shape
+    bs = min(512, _round_up(s, _SUBLANE))
+    bd = min(512, _round_up(d, _LANE))
+    sp, dp = _round_up(s, bs), _round_up(d, bd)
+    kp = _round_up(k, min(128, _round_up(k, _LANE)))
+    # Padding rows get assignment kp (out of range of every tile).
+    idxp = jnp.pad(idx.astype(jnp.int32), (0, sp - s), constant_values=kp)
+    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+    sums, counts = cluster_sums_pallas(
+        xp, idxp, k, block_s=bs, block_k=min(128, kp), block_d=bd,
+        interpret=(impl == "interpret"),
+    )
+    return sums[:, :d], counts
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def mssc_objective(x: Array, c: Array, *, impl: str | None = None) -> Array:
+    """Equation (1): sum of squared distances to nearest centroids."""
+    _, dist = assign_clusters(x, c, impl=impl)
+    return jnp.sum(dist)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def lloyd_pass(x: Array, c: Array, *, impl: str | None = None):
+    """Fused Lloyd pass: (idx, dist, sums, counts) with ONE read of x.
+
+    Falls back to assign+cluster_sums (two passes) on the ref path or when
+    D exceeds the VMEM row-block budget.
+    """
+    impl = resolve_impl(impl)
+    s, d = x.shape
+    k = c.shape[0]
+    if impl == "ref" or d > 4096:
+        idx, dist = assign_clusters(x, c, impl=impl)
+        sums, counts = cluster_sums(x, idx, k, impl=impl)
+        return idx, dist, sums, counts
+    from repro.kernels.lloyd import lloyd_pass_pallas
+
+    bs = min(256, _round_up(s, _SUBLANE))
+    bk = min(128, _round_up(k, _LANE))
+    dp = _round_up(d, _LANE)
+    sp, kp = _round_up(s, bs), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+    cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
+    idx, dist, sums, counts = lloyd_pass_pallas(
+        xp, cp, k_valid=k, s_valid=s, block_s=bs, block_k=bk,
+        interpret=(impl == "interpret"),
+    )
+    return idx[:s], dist[:s], sums[:k, :d], counts[:k]

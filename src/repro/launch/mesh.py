@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax call).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips/pod) single-pod or 2x16x16 multi-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / CPU dry-runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (max(1, n // 2), min(2, n)) if n > 1 else (1, 1)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,134 @@
+"""Step functions (train / prefill / decode) + abstract input specs per cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step the shape exercises — weak-type-correct, shardable, no
+device allocation — the dry-run lowers against these.
+
+Shapes (assignment): train_4k (train_step), prefill_32k (serve_prefill),
+decode_32k / long_500k (serve_step: 1 new token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+
+SHAPES: dict[str, dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def batch_structs(cfg: ModelConfig, seq_len: int, batch: int) -> dict[str, Any]:
+    tok = jnp.int32
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len // cfg.dec_ratio), tok),
+        }
+    if cfg.family == "vlm":
+        return {
+            "img_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len - cfg.img_tokens), tok),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq_len), tok)}
+
+
+def make_train_step(cfg: ModelConfig, *, lr_steps: int = 10000,
+                    grad_accum: int | None = None) -> Callable:
+    opt = make_optimizer(cfg.optimizer, cosine_schedule(3e-4, lr_steps))
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+    gdt = jnp.dtype(cfg.grad_dtype)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+
+            def micro_step(acc, mb):
+                gsum, lsum = acc
+                loss, grads = jax.value_and_grad(
+                    lambda p: M.loss_fn(cfg, p, mb)
+                )(params)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(gdt), gsum, grads
+                )
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            init = (g0, jnp.zeros((), jnp.float32))
+            if cfg.unroll:  # flat HLO for roofline calibration
+                carry = init
+                for i in range(accum):
+                    carry, _ = micro_step(
+                        carry, jax.tree.map(lambda x: x[i], micro)
+                    )
+                gsum, lsum = carry
+            else:
+                (gsum, lsum), _ = jax.lax.scan(micro_step, init, micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(cfg, p, batch)
+            )(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    train_step.optimizer = opt  # used by the dry-run for state specs/structs
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def serve_prefill(params, batch):
+        return M.prefill(cfg, params, batch)
+    return serve_prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, tokens, pos, caches):
+        return M.decode_step(cfg, params, tokens, pos, caches)
+    return serve_step
+
+
+def opt_state_structs(cfg: ModelConfig, opt) -> Any:
+    shapes = M.param_shapes(cfg)
+    return jax.eval_shape(opt.init, shapes)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict[str, Any]:
+    """Abstract inputs for the cell's step function."""
+    meta = SHAPES[shape]
+    s, b = meta["seq_len"], meta["global_batch"]
+    if meta["kind"] == "train":
+        return {"batch": batch_structs(cfg, s, b)}
+    if meta["kind"] == "prefill":
+        return {"batch": batch_structs(cfg, s, b)}
+    # decode: 1 new token against a cache of length seq_len
+    enc_len = s if cfg.family == "encdec" else 0
+    smax = s // cfg.dec_ratio if cfg.family == "encdec" else s
+    caches = M.init_cache(cfg, b, smax, enc_len=enc_len, abstract=True)
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }

@@ -1,0 +1,84 @@
+"""End-to-end training driver.
+
+CPU-runnable at smoke scale; the same code path the dry-run lowers for the
+production mesh (steps.make_train_step + sharding rules + Trainer fault
+tolerance).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import token_batches
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.runtime import Trainer, TrainerConfig
+
+
+def batches_for(cfg, batch, seq, seed=0):
+    if cfg.family == "encdec":
+        rng = np.random.default_rng(seed)
+        while True:
+            yield {
+                "frames": rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32),
+                "tokens": rng.integers(
+                    0, cfg.vocab_size, (batch, max(4, seq // cfg.dec_ratio))
+                ).astype(np.int32),
+            }
+    elif cfg.family == "vlm":
+        rng = np.random.default_rng(seed)
+        base = token_batches(cfg.vocab_size, batch, seq - cfg.img_tokens, seed=seed)
+        for b in base:
+            yield {
+                "img_embeds": rng.normal(
+                    size=(batch, cfg.img_tokens, cfg.d_model)).astype(np.float32),
+                "tokens": b["tokens"],
+            }
+    else:
+        yield from token_batches(cfg.vocab_size, batch, seq, seed=seed)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    step_fn = jax.jit(S.make_train_step(cfg, lr_steps=args.steps, grad_accum=1))
+    opt = step_fn.__wrapped__.optimizer
+
+    def init_state():
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        return params, opt.init(params)
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir),
+        step_fn, init_state, batches_for(cfg, args.batch, args.seq, args.seed),
+    )
+    result = trainer.run()
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    result["loss_first"] = losses[0] if losses else None
+    result["loss_last"] = losses[-1] if losses else None
+    result["loss_min"] = min(losses) if losses else None
+    print(json.dumps(result, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.models.common import ModelConfig
+
+__all__ = ["ModelConfig"]

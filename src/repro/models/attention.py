@@ -1,0 +1,352 @@
+"""Attention: GQA (opt. qk-norm / bias / sliding window), MLA, KV caches.
+
+Training / prefill use a *triangular q-chunk schedule*: a python-unrolled
+loop over query chunks where each chunk attends only to its (statically
+sliced) causal KV prefix — so HLO FLOPs are ~S(S+1)/2, not S^2, and the
+(B,H,S,S) score matrix never materializes (peak score buffer is
+(B,H,q_chunk,S)). Sliding-window layers additionally slice the KV prefix to
+the window. This matters for the roofline numbers: masked-but-computed
+attention would inflate HLO_FLOPs by up to 2x (see EXPERIMENTS.md SSPerf).
+
+Decode reads a functional cache: full layers keep (B, Smax, KV, hd) K/V;
+window layers keep a ring buffer (B, window, KV, hd) — RoPE is applied to K
+*before* caching so ring rotation is position-free. MLA decode uses the
+absorbed formulation over the compressed (B, S, kv_lora + rope) cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Table, apply_rope, rms_norm, rope_freqs
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter tables
+# ---------------------------------------------------------------------------
+
+
+def attn_table(cfg: ModelConfig) -> Table:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    t: Table = {
+        "wq": ((d, h * hd), ("embed", "heads"), "normal"),
+        "wk": ((d, kv * hd), ("embed", "kv_heads"), "normal"),
+        "wv": ((d, kv * hd), ("embed", "kv_heads"), "normal"),
+        "wo": ((h * hd, d), ("heads", "embed"), "normal"),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ((h * hd,), ("heads",), "zeros")
+        t["bk"] = ((kv * hd,), ("kv_heads",), "zeros")
+        t["bv"] = ((kv * hd,), ("kv_heads",), "zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = ((hd,), (None,), "ones")
+        t["k_norm"] = ((hd,), (None,), "ones")
+    return t
+
+
+def mla_table(cfg: ModelConfig) -> Table:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": ((d, cfg.q_lora_rank), ("embed", None), "normal"),
+        "q_norm": ((cfg.q_lora_rank,), (None,), "ones"),
+        "wq_b": ((cfg.q_lora_rank, h * qk), (None, "heads"), "normal"),
+        "wkv_a": ((d, cfg.kv_lora_rank + cfg.qk_rope_dim), ("embed", None), "normal"),
+        "kv_norm": ((cfg.kv_lora_rank,), (None,), "ones"),
+        "wkv_b": (
+            (cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            (None, "heads"),
+            "normal",
+        ),
+        "wo": ((h * cfg.v_head_dim, d), ("heads", "embed"), "normal"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q: Array, k: Array, v: Array, bias: Array | None, scale: float) -> Array:
+    """q (B,Q,H,hd), k/v (B,T,KV,*) -> (B,Q,H,v_dim); GQA via head grouping."""
+    b, qlen, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, qlen, kvh, rep, hd)
+    scores = jnp.einsum(
+        "bqgrd,btgd->bgrqt", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if bias is not None:
+        scores = scores + bias  # bias broadcastable to (b,g,r,q,t)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bgrqt,btgv->bqgrv", p, v.astype(jnp.float32))
+    return ctx.reshape(b, qlen, h, v.shape[-1]).astype(q.dtype)
+
+
+def causal_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_chunk: int,
+    window: int = 0,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    """Triangular q-chunk schedule (see module docstring). q,k,v aligned in
+    time: position of q[:, i] == position of k[:, i]."""
+    b, s, h, hd = q.shape
+    scale = scale or (1.0 / math.sqrt(hd))
+    qc = min(q_chunk, s)
+    out = []
+    for qs in range(0, s, qc):
+        qe = min(qs + qc, s)
+        qi = q[:, qs:qe]
+        if causal:
+            kv_end = qe
+            kv_start = max(0, qs - window + 1) if window else 0
+        else:
+            kv_end, kv_start = s, 0
+        ki = k[:, kv_start:kv_end]
+        vi = v[:, kv_start:kv_end]
+        qpos = jnp.arange(qs, qe)
+        kpos = jnp.arange(kv_start, kv_end)
+        mask = jnp.ones((qe - qs, kv_end - kv_start), jnp.bool_)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+        bias = jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+        out.append(_sdpa(qi, ki, vi, bias, scale))
+    return jnp.concatenate(out, axis=1)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    pos: Array,
+    *,
+    window: int = 0,
+    scale: float | None = None,
+) -> Array:
+    """One-token attention against the cache. pos: () int32 current position.
+
+    Full layers: valid entries are idx <= pos. Window layers (ring buffer of
+    size ``window``): all slots valid once pos >= window-1, else idx <= pos.
+    """
+    hd = q.shape[-1]
+    scale = scale or (1.0 / math.sqrt(hd))
+    t = k_cache.shape[1]
+    idx = jnp.arange(t)
+    if window:
+        valid = jnp.where(pos >= window - 1, jnp.ones((t,), jnp.bool_), idx <= pos)
+    else:
+        valid = idx <= pos
+    bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    return _sdpa(q, k_cache, v_cache, bias, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: Mapping[str, Array], pre: str, x: Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p[f"{pre}wq"]
+    k = x @ p[f"{pre}wk"]
+    v = x @ p[f"{pre}wv"]
+    if cfg.qkv_bias:
+        q = q + p[f"{pre}bq"]
+        k = k + p[f"{pre}bk"]
+        v = v + p[f"{pre}bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[f"{pre}q_norm"])
+        k = rms_norm(k, p[f"{pre}k_norm"])
+    return q, k, v
+
+
+def gqa_forward(
+    p: Mapping[str, Array],
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+    window: int = 0,
+    causal: bool = True,
+    return_cache: bool = False,
+):
+    """Training/prefill attention. positions (B, S) int32 (RoPE)."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    q, k, v = _project_qkv(p, pre, x, cfg)
+    cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    ctx = causal_attention(
+        q, k, v, q_chunk=cfg.q_chunk, window=window, causal=causal
+    )
+    out = ctx.reshape(x.shape[0], x.shape[1], -1) @ p[f"{pre}wo"]
+    if not return_cache:
+        return out
+    if window:
+        # Keep only the last `window` positions in ring order so decode can
+        # continue writing at pos % window.
+        s = k.shape[1]
+        if s >= window:
+            # keep[i] holds position (s-window+i); its ring slot is
+            # (s-window+i) % window == (s+i) % window, i.e. a roll by s%window.
+            keep = k[:, s - window :], v[:, s - window :]
+            roll = s % window
+            kc = jnp.roll(keep[0], roll, axis=1)
+            vc = jnp.roll(keep[1], roll, axis=1)
+        else:
+            pad = window - s
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out, (kc, vc)
+    return out, (k, v)
+
+
+def gqa_decode(
+    p: Mapping[str, Array],
+    x: Array,
+    pos: Array,
+    cache: tuple[Array, Array],
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+    window: int = 0,
+):
+    """One-token decode. x (B, 1, d); pos () int32; cache (K, V)."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    q, k, v = _project_qkv(p, pre, x, cfg)
+    posb = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    cos, sin = rope_freqs(posb, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k_cache, v_cache = cache
+    slot = pos % window if window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    ctx = decode_attention(q, k_cache, v_cache, pos, window=window)
+    out = ctx.reshape(x.shape[0], 1, -1) @ p[f"{pre}wo"]
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p, pre, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ql = rms_norm(x @ p[f"{pre}wq_a"], p[f"{pre}q_norm"])
+    q = (ql @ p[f"{pre}wq_b"]).reshape(b, s, h, qk)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim :]
+    cos, sin = rope_freqs(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_kv_compress(p, pre, x, cfg: ModelConfig, positions):
+    """-> c_kv normed (B,S,kv_lora), k_rope roped (B,S,1,rope)."""
+    kv_a = x @ p[f"{pre}wkv_a"]
+    c_kv = rms_norm(kv_a[..., : cfg.kv_lora_rank], p[f"{pre}kv_norm"])
+    k_rope = kv_a[..., cfg.kv_lora_rank :][:, :, None, :]
+    cos, sin = rope_freqs(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_forward(
+    p: Mapping[str, Array],
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+    return_cache: bool = False,
+):
+    """Training/prefill MLA in the expanded (materialized k,v) form."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, pre, x, cfg, positions)
+    c_kv, k_rope = _mla_kv_compress(p, pre, x, cfg, positions)
+    kv = (c_kv @ p[f"{pre}wkv_b"]).reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.v_head_dim
+    )
+    k_nope = kv[..., : cfg.qk_nope_dim]
+    v = kv[..., cfg.qk_nope_dim :]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], axis=-1
+    )
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    ctx = causal_attention(q, k, v, q_chunk=cfg.q_chunk, scale=scale)
+    out = ctx.reshape(b, s, -1) @ p[f"{pre}wo"]
+    if return_cache:
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out
+
+
+def mla_decode(
+    p: Mapping[str, Array],
+    x: Array,
+    pos: Array,
+    cache: tuple[Array, Array],
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+):
+    """Absorbed-matrix MLA decode over the compressed cache.
+
+    cache: (c_kv (B,Smax,kv_lora), k_rope (B,Smax,rope)).
+    score_h = q_nope_h^T W_uk_h c + q_rope_h^T k_rope ;
+    out_h   = W_uv_h (sum_t p_t c_t) — the per-head K/V are never expanded.
+    """
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    b = x.shape[0]
+    h = cfg.n_heads
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, pre, x, cfg, posb)  # (B,1,H,*)
+    c_new, krope_new = _mla_kv_compress(p, pre, x, cfg, posb)
+    c_cache, r_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        r_cache, krope_new[:, :, 0, :], pos, axis=1
+    )
+    wkv_b = p[f"{pre}wkv_b"].reshape(
+        cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim
+    )
+    w_uk = wkv_b[..., : cfg.qk_nope_dim]   # (kv_lora, H, nope)
+    w_uv = wkv_b[..., cfg.qk_nope_dim :]   # (kv_lora, H, v)
+    q_abs = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bqhk,btk->bhqt", q_abs, c_cache.astype(jnp.float32))
+    scores += jnp.einsum(
+        "bqhr,btr->bhqt", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32)
+    )
+    scores *= 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    t = c_cache.shape[1]
+    valid = jnp.arange(t) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bhqt,btk->bqhk", pr, c_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bqhk,khv->bqhv", ctx_c, w_uv.astype(jnp.float32))
+    out = ctx.reshape(b, 1, -1).astype(x.dtype) @ p[f"{pre}wo"]
+    return out, (c_cache, r_cache)

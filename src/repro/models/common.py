@@ -1,0 +1,268 @@
+"""Model substrate: config schema, parameter tables, norms, RoPE, embeddings.
+
+Parameters are declared once per architecture as a *table*:
+``name -> (shape, logical_axes, init_kind)``. From one table we derive
+  * initialized parameter pytrees (train),
+  * ShapeDtypeStruct pytrees (dry-run lowering, no allocation),
+  * PartitionSpec pytrees via the deployment's logical-axis rules
+    (``repro.distributed.sharding``).
+
+Stacked (scanned) layers simply prepend a "layers" axis to every entry of the
+block table — a single source of truth for shapes, sharding and init.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str            # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0      # 0 -> d_model // n_heads
+    # attention
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int = 0            # sliding window for local layers (gemma3: 1024)
+    local_ratio: int = 0       # N local layers per 1 global (gemma3: 5)
+    # moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_moe: int = 0
+    n_dense_layers: int = 0    # leading dense layers (deepseek: 3)
+    router_type: str = "softmax"   # softmax | sigmoid (deepseek aux-free)
+    capacity_factor: float = 1.25
+    moe_groups: int = 128      # dispatch groups (group-local sorts; see moe.py)
+    # MLA (deepseek)
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    attn_every: int = 0        # zamba2: shared attention block period
+    # xlstm
+    slstm_every: int = 0       # one sLSTM per N blocks (8 -> "7:1")
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    dec_ratio: int = 8         # decoder len = encoder len // dec_ratio
+    # vlm (llava)
+    img_tokens: int = 0
+    # training / runtime policy
+    tie_embeddings: bool = True
+    mtp_depth: int = 0
+    optimizer: str = "adamw"   # adamw | adafactor (671B-class)
+    grad_accum: int = 1        # microbatches per step (activation memory)
+    grad_dtype: str = "float32"  # accumulation buffer dtype (bf16 for 671B)
+    q_chunk: int = 1024        # attention q-chunk for the triangular schedule
+    dtype: str = "bfloat16"
+    # Roofline calibration hooks: override segment group counts, e.g.
+    # (("moe", 2),), and/or unroll the segment loops into flat HLO. XLA cost
+    # analysis counts while bodies ONCE regardless of trip count, so the
+    # dry-run compiles small *unrolled* variants (n=1 vs n=2) and
+    # extrapolates affinely (see launch/dryrun.py).
+    plan_override: tuple[tuple[str, int], ...] = ()
+    unroll: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def activ_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid", "ssm", "vlm")
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode memory growth: SSM/hybrid state or sliding
+        window on most layers (DESIGN.md SS5)."""
+        return self.family in ("hybrid", "ssm") or self.local_ratio > 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+# entry: (shape, logical_axes, init_kind). init kinds:
+#   "normal"    fan-in scaled normal (1/sqrt(fan_in))
+#   "embed"     N(0, 1) * d^-0.5-free (standard embedding init)
+#   "zeros", "ones"
+#   "ssm_a"     mamba A_log init, "ssm_dt" dt bias init
+Entry = tuple[tuple[int, ...], tuple[str | None, ...], str]
+Table = dict[str, Entry]
+
+
+def stack_table(table: Table, n: int, axis_name: str = "layers") -> Table:
+    return {
+        k: ((n,) + shape, (axis_name,) + logical, kind)
+        for k, (shape, logical, kind) in table.items()
+    }
+
+
+def prefix_table(table: Table, prefix: str) -> Table:
+    return {f"{prefix}/{k}": v for k, v in table.items()}
+
+
+def _init_leaf(key: Array, shape, kind: str, dtype) -> Array:
+    if kind == "zeros":
+        return jnp.zeros(shape, dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    if kind == "embed":
+        return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+    if kind == "ssm_a":
+        # A_log ~ log(uniform[1,16]) (mamba2 init); stored positive.
+        u = jax.random.uniform(key, shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dtype)
+    if kind == "ssm_dt":
+        # dt bias: softplus^-1 of dt ~ loguniform[1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, shape)
+            * (math.log(1e-1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    if kind == "normal":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(key, shape) / math.sqrt(max(fan_in, 1))).astype(dtype)
+    raise ValueError(f"unknown init kind {kind!r}")
+
+
+def init_from_table(key: Array, table: Table, dtype=jnp.float32) -> dict[str, Array]:
+    """Deterministic per-name keys: robust to table ordering changes."""
+    out = {}
+    for name, (shape, _, kind) in sorted(table.items()):
+        sub = jax.random.fold_in(key, hash(name) % (1 << 31))
+        out[name] = _init_leaf(sub, shape, kind, dtype)
+    return out
+
+
+def shapes_from_table(table: Table, dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+    return {
+        name: jax.ShapeDtypeStruct(shape, dtype)
+        for name, (shape, _, _) in table.items()
+    }
+
+
+def specs_from_table(
+    table: Table, rules: Mapping[str, str | tuple[str, ...] | None]
+) -> dict[str, jax.sharding.PartitionSpec]:
+    from jax.sharding import PartitionSpec as P
+
+    out = {}
+    for name, (shape, logical, _) in table.items():
+        axes = tuple(rules.get(ax) if ax is not None else None for ax in logical)
+        out[name] = P(*axes)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (functional; params indexed by name)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(positions: Array, dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (...,) -> cos/sin (..., dim//2)."""
+    half = dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) — rotate-half convention."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def gated_mlp(params: Mapping[str, Array], prefix: str, x: Array) -> Array:
+    """SwiGLU MLP: silu(x W_gate) * (x W_up) W_down."""
+    g = x @ params[f"{prefix}/wg"]
+    u = x @ params[f"{prefix}/wu"]
+    return (jax.nn.silu(g) * u) @ params[f"{prefix}/wd"]
+
+
+def mlp_table(cfg: ModelConfig, d_ff: int | None = None) -> Table:
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    return {
+        "wg": ((d, ff), ("embed", "mlp"), "normal"),
+        "wu": ((d, ff), ("embed", "mlp"), "normal"),
+        "wd": ((ff, d), ("mlp", "embed"), "normal"),
+    }
+
+
+def sinusoidal_positions(s: int, d: int) -> Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def cross_entropy_loss(logits: Array, labels: Array, *, z_loss: float = 1e-4) -> Array:
+    """Mean NLL with a small z-loss (logit-norm regularizer; stabilizes bf16).
+
+    The label pick is a one-hot *contraction*, not take_along_axis: a gather
+    along a vocab-sharded axis makes GSPMD all-gather the full (B,S,V) f32
+    logits per shard (~5 GB/microbatch at V=152k — measured +20 GB/device on
+    qwen1.5 train, EXPERIMENTS.md It.2a). The contraction reduces over the
+    sharded axis with a per-shard partial + psum instead.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - ll
+    return jnp.mean(nll) + z_loss * jnp.mean(lse * lse)

@@ -1,0 +1,784 @@
+"""Architecture assembly: segments of scanned blocks + train/prefill/decode.
+
+Every assigned architecture is described by a *plan*: an ordered list of
+``Segment(name, n, kinds)``. A segment scans ``n`` groups; within a group the
+``kinds`` list is unrolled in python (e.g. gemma3's ``5x local + 1 global``,
+zamba2's ``6x mamba + shared-attn``, xlstm's ``7x mlstm + slstm``). Parameters
+of block j in a segment are stacked over the n groups, so HLO stays small
+(one while loop per segment) and remat applies per group.
+
+Shared (weight-tied) blocks — zamba2's attention — live outside the segment
+stacks and are closed over by every group (exact Zamba2 sharing scheme).
+
+Caches for decode mirror the parameter layout: cache[segment][j] is a pytree
+stacked over n, consumed/produced as scan xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (
+    ModelConfig,
+    Table,
+    cross_entropy_loss,
+    gated_mlp,
+    init_from_table,
+    layer_norm,
+    mlp_table,
+    prefix_table,
+    rms_norm,
+    shapes_from_table,
+    sinusoidal_positions,
+    specs_from_table,
+    stack_table,
+)
+
+Array = jax.Array
+
+# Activation sharding constraint, set by the launcher (dry-run / trainer)
+# before tracing: a PartitionSpec applied to the (B, S, d) residual stream
+# at every block boundary. Without it GSPMD tends to leave the scan residual
+# stack replicated, which blows per-device temp memory (see DESIGN.md SS4).
+_ACTIVATION_SPEC: list = [None]
+
+
+def set_activation_spec(spec) -> None:
+    _ACTIVATION_SPEC[0] = spec
+
+
+def _constrain(x: Array) -> Array:
+    spec = _ACTIVATION_SPEC[0]
+    if spec is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # no mesh in scope (e.g. plain-jit CPU tests) — a
+        return x       # sharding hint is best-effort by design
+
+
+# Cache sharding policy (shape -> PartitionSpec | None), set by the launcher.
+# Without it the scan-stacked cache ys of prefill default to REPLICATED
+# (measured: +180 GB/device on deepseek prefill_32k; EXPERIMENTS.md It.2b).
+_CACHE_SPEC_FN: list = [None]
+
+
+def set_cache_spec_fn(fn) -> None:
+    _CACHE_SPEC_FN[0] = fn
+
+
+def _constrain_cache(tree):
+    fn = _CACHE_SPEC_FN[0]
+    if fn is None or tree is None:
+        return tree
+
+    def leaf(x):
+        spec = fn(x.shape)
+        if spec is None:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:  # best-effort (see _constrain)
+            return x
+
+    return jax.tree.map(leaf, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    n: int                      # scanned group count
+    kinds: tuple[str, ...]      # unrolled block kinds within a group
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+def build_plan(cfg: ModelConfig) -> tuple[Segment, ...]:
+    plan = _build_plan_base(cfg)
+    if cfg.plan_override:
+        over = dict(cfg.plan_override)
+        plan = tuple(
+            dataclasses.replace(s, n=over.get(s.name, s.n)) for s in plan
+        )
+    return plan
+
+
+def _build_plan_base(cfg: ModelConfig) -> tuple[Segment, ...]:
+    if cfg.family == "encdec":
+        return (
+            Segment("enc", cfg.enc_layers or cfg.n_layers, ("enc_block",)),
+            Segment("dec", cfg.n_layers, ("dec_block",)),
+        )
+    if cfg.family == "ssm":  # xlstm
+        per = cfg.slstm_every
+        groups = cfg.n_layers // per
+        return (Segment("xl", groups, ("mlstm",) * (per - 1) + ("slstm",)),)
+    if cfg.family == "hybrid":  # zamba2
+        per = cfg.attn_every
+        groups = cfg.n_layers // per
+        tail = cfg.n_layers - groups * per
+        segs = [Segment("zb", groups, ("mamba",) * (per - 1) + ("shared_attn",))]
+        if tail:
+            segs.append(Segment("zt", tail, ("mamba",)))
+        return tuple(segs)
+    if cfg.family == "moe":
+        segs = []
+        if cfg.n_dense_layers:
+            segs.append(Segment("dense", cfg.n_dense_layers, ("attn_mlp",)))
+        segs.append(
+            Segment("moe", cfg.n_layers - cfg.n_dense_layers, ("attn_moe",))
+        )
+        return tuple(segs)
+    # dense (incl. vlm backbone)
+    if cfg.local_ratio:
+        per = cfg.local_ratio + 1
+        groups = cfg.n_layers // per
+        tail = cfg.n_layers - groups * per
+        segs = [Segment("gl", groups, ("attn_local",) * cfg.local_ratio + ("attn_mlp",))]
+        if tail:
+            segs.append(Segment("gt", tail, ("attn_local",)))
+        return tuple(segs)
+    return (Segment("L", cfg.n_layers, ("attn_mlp",)),)
+
+
+# ---------------------------------------------------------------------------
+# block kind: tables
+# ---------------------------------------------------------------------------
+
+
+def _kind_table(kind: str, cfg: ModelConfig) -> Table:
+    d = cfg.d_model
+    norm1 = {"norm1": ((d,), ("embed",), "ones")}
+    norm2 = {"norm2": ((d,), ("embed",), "ones")}
+    if kind in ("attn_mlp", "attn_local"):
+        a = attn.mla_table(cfg) if cfg.mla else attn.attn_table(cfg)
+        return {**norm1, **prefix_table(a, "attn"), **norm2,
+                **prefix_table(mlp_table(cfg), "mlp")}
+    if kind == "attn_moe":
+        a = attn.mla_table(cfg) if cfg.mla else attn.attn_table(cfg)
+        return {**norm1, **prefix_table(a, "attn"), **norm2,
+                **prefix_table(moe_mod.moe_table(cfg), "moe")}
+    if kind == "mamba":
+        return {**norm1, **prefix_table(ssm_mod.mamba_table(cfg), "ssm")}
+    if kind == "shared_attn":
+        # Marker only: parameters are the global shared block (see build_table).
+        return {}
+    if kind == "mlstm":
+        return {**norm1, **prefix_table(xlstm_mod.mlstm_table(cfg), "mx")}
+    if kind == "slstm":
+        return {**norm1, **prefix_table(xlstm_mod.slstm_table(cfg), "sx")}
+    if kind == "enc_block":
+        return {
+            "ln1_s": ((d,), ("embed",), "ones"), "ln1_b": ((d,), ("embed",), "zeros"),
+            **prefix_table(attn.attn_table(cfg), "attn"),
+            "ln2_s": ((d,), ("embed",), "ones"), "ln2_b": ((d,), ("embed",), "zeros"),
+            **prefix_table(_whisper_mlp(cfg), "mlp"),
+        }
+    if kind == "dec_block":
+        return {
+            "ln1_s": ((d,), ("embed",), "ones"), "ln1_b": ((d,), ("embed",), "zeros"),
+            **prefix_table(attn.attn_table(cfg), "attn"),
+            "ln2_s": ((d,), ("embed",), "ones"), "ln2_b": ((d,), ("embed",), "zeros"),
+            **prefix_table(attn.attn_table(cfg), "xattn"),
+            "ln3_s": ((d,), ("embed",), "ones"), "ln3_b": ((d,), ("embed",), "zeros"),
+            **prefix_table(_whisper_mlp(cfg), "mlp"),
+        }
+    raise ValueError(kind)
+
+
+def _whisper_mlp(cfg: ModelConfig) -> Table:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ((d, ff), ("embed", "mlp"), "normal"),
+        "b1": ((ff,), ("mlp",), "zeros"),
+        "w2": ((ff, d), ("mlp", "embed"), "normal"),
+        "b2": ((d,), ("embed",), "zeros"),
+    }
+
+
+def build_table(cfg: ModelConfig) -> dict[str, Table]:
+    """Full parameter table, grouped: {"segment:<name>:<j>": stacked table,
+    "top": embeddings/head/final norm, "shared": weight-tied blocks}."""
+    tables: dict[str, Table] = {}
+    d = cfg.d_model
+    top: Table = {
+        "embed": ((cfg.vocab_size, d), ("vocab", "embed"), "embed"),
+        "final_norm": ((d,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        top["head"] = ((d, cfg.vocab_size), ("embed", "vocab"), "normal")
+    if cfg.family == "encdec":
+        top["final_norm_b"] = ((d,), ("embed",), "zeros")
+        top["enc_final_s"] = ((d,), ("embed",), "ones")
+        top["enc_final_b"] = ((d,), ("embed",), "zeros")
+    if cfg.mtp_depth:
+        top["mtp/proj"] = ((2 * d, d), ("embed", "embed"), "normal")
+        top["mtp/norm_h"] = ((d,), ("embed",), "ones")
+        top["mtp/norm_e"] = ((d,), ("embed",), "ones")
+    tables["top"] = top
+
+    shared: Table = {}
+    if cfg.family == "hybrid":
+        shared.update(prefix_table(_kind_table("attn_mlp", cfg), "shared_attn"))
+    if cfg.mtp_depth:
+        shared.update(prefix_table(_kind_table("attn_mlp", cfg), "mtp_block"))
+    if shared:
+        tables["shared"] = shared
+
+    for seg in build_plan(cfg):
+        for j, kind in enumerate(seg.kinds):
+            t = _kind_table(kind, cfg)
+            if t:
+                tables[f"segment:{seg.name}:{j}"] = stack_table(t, seg.n)
+    return tables
+
+
+def flat_table(cfg: ModelConfig) -> Table:
+    out: Table = {}
+    for group, t in build_table(cfg).items():
+        out.update({f"{group}|{k}": v for k, v in t.items()})
+    return out
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict[str, Array]:
+    return init_from_table(key, flat_table(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    return shapes_from_table(flat_table(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+def param_specs(cfg: ModelConfig, rules: Mapping[str, Any]):
+    return specs_from_table(flat_table(cfg), rules)
+
+
+def _group_params(params: Mapping[str, Array], group: str) -> dict[str, Array]:
+    pre = f"{group}|"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+# ---------------------------------------------------------------------------
+# block forward dispatch
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(
+    kind: str,
+    p: Mapping[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,                     # train | prefill | decode
+    positions: Array | None,
+    pos: Array | None,
+    cache: Any,
+    shared: Mapping[str, Array] | None,
+    enc_out: Array | None = None,
+):
+    """Returns (x_out, new_cache, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "shared_attn":
+        # weight-tied global attention block (zamba2)
+        sp = {k[len("shared_attn/"):]: v for k, v in shared.items()
+              if k.startswith("shared_attn/")}
+        return _block_apply(
+            "attn_mlp", sp, x, cfg, mode=mode, positions=positions, pos=pos,
+            cache=cache, shared=None,
+        )
+
+    if kind in ("attn_mlp", "attn_local", "attn_moe"):
+        window = cfg.window if kind == "attn_local" else 0
+        h = rms_norm(x, p["norm1"])
+        if mode == "decode":
+            if cfg.mla:
+                a_out, new_cache = attn.mla_decode(p, h, pos, cache, cfg, prefix="attn")
+            else:
+                a_out, new_cache = attn.gqa_decode(
+                    p, h, pos, cache, cfg, prefix="attn", window=window
+                )
+        else:
+            want_cache = mode == "prefill"
+            if cfg.mla:
+                r = attn.mla_forward(p, h, positions, cfg, prefix="attn",
+                                     return_cache=want_cache)
+            else:
+                r = attn.gqa_forward(p, h, positions, cfg, prefix="attn",
+                                     window=window, return_cache=want_cache)
+            a_out, new_cache = (r if want_cache else (r, None))
+        x = x + a_out
+        h2 = rms_norm(x, p["norm2"])
+        if kind == "attn_moe":
+            # Decode batches are tiny: relax capacity towards dropless
+            # (E/top_k ensures zero drops) — standard serving practice.
+            cf = (
+                min(4.0 * cfg.capacity_factor, cfg.n_experts / cfg.top_k)
+                if mode == "decode" else None
+            )
+            m_out, aux = moe_mod.moe_forward(
+                p, h2, cfg, prefix="moe", capacity_factor=cf
+            )
+        else:
+            m_out, aux = gated_mlp(p, "mlp", h2), zero
+        return x + m_out, new_cache, aux
+
+    if kind == "mamba":
+        h = rms_norm(x, p["norm1"])
+        if mode == "decode":
+            out, new_cache = ssm_mod.mamba_decode(p, h, cache, cfg, prefix="ssm")
+        elif mode == "prefill":
+            out, new_cache = ssm_mod.mamba_forward(
+                p, h, cfg, prefix="ssm", return_cache=True
+            )
+        else:
+            out, new_cache = ssm_mod.mamba_forward(p, h, cfg, prefix="ssm"), None
+        return x + out, new_cache, zero
+
+    if kind == "mlstm":
+        h = rms_norm(x, p["norm1"])
+        if mode == "decode":
+            out, new_cache = xlstm_mod.mlstm_decode(p, h, cache, cfg, prefix="mx")
+        elif mode == "prefill":
+            out, new_cache = xlstm_mod.mlstm_forward(
+                p, h, cfg, prefix="mx", return_cache=True
+            )
+        else:
+            out, new_cache = xlstm_mod.mlstm_forward(p, h, cfg, prefix="mx"), None
+        return x + out, new_cache, zero
+
+    if kind == "slstm":
+        h = rms_norm(x, p["norm1"])
+        if mode == "decode":
+            out, new_cache = xlstm_mod.slstm_decode(p, h, cache, cfg, prefix="sx")
+        elif mode == "prefill":
+            out, new_cache = xlstm_mod.slstm_forward(
+                p, h, cfg, prefix="sx", return_cache=True
+            )
+        else:
+            out, new_cache = xlstm_mod.slstm_forward(p, h, cfg, prefix="sx"), None
+        return x + out, new_cache, zero
+
+    if kind == "enc_block":
+        h = layer_norm(x, p["ln1_s"], p["ln1_b"])
+        a_out = attn.gqa_forward(p, h, positions, cfg, prefix="attn", causal=False)
+        x = x + a_out
+        h2 = layer_norm(x, p["ln2_s"], p["ln2_b"])
+        m = jax.nn.gelu(h2 @ p["mlp/w1"] + p["mlp/b1"]) @ p["mlp/w2"] + p["mlp/b2"]
+        return x + m, None, zero
+
+    if kind == "dec_block":
+        h = layer_norm(x, p["ln1_s"], p["ln1_b"])
+        self_cache = cache[0] if cache is not None else None
+        if mode == "decode":
+            a_out, new_self = attn.gqa_decode(p, h, pos, self_cache, cfg, prefix="attn")
+        else:
+            want = mode == "prefill"
+            r = attn.gqa_forward(p, h, positions, cfg, prefix="attn", return_cache=want)
+            a_out, new_self = (r if want else (r, None))
+        x = x + a_out
+        h2 = layer_norm(x, p["ln2_s"], p["ln2_b"])
+        # cross attention: k/v from encoder output (cached at prefill)
+        if mode == "decode":
+            xk, xv = cache[1]
+            b = h2.shape[0]
+            q = (h2 @ p["xattn/wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+            ctx = attn.decode_attention(
+                q, xk, xv, jnp.asarray(xk.shape[1] - 1, jnp.int32)
+            )
+            a2 = ctx.reshape(b, 1, -1) @ p["xattn/wo"]
+            new_cross = (xk, xv)
+        else:
+            b, sd, _ = h2.shape
+            se = enc_out.shape[1]
+            q = (h2 @ p["xattn/wq"]).reshape(b, sd, cfg.n_heads, cfg.hd)
+            xk = (enc_out @ p["xattn/wk"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+            xv = (enc_out @ p["xattn/wv"]).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+            ctx = attn.causal_attention(q, xk, xv, q_chunk=cfg.q_chunk, causal=False)
+            a2 = ctx.reshape(b, sd, -1) @ p["xattn/wo"]
+            new_cross = (xk, xv) if mode == "prefill" else None
+        x = x + a2
+        h3 = layer_norm(x, p["ln3_s"], p["ln3_b"])
+        m = jax.nn.gelu(h3 @ p["mlp/w1"] + p["mlp/b1"]) @ p["mlp/w2"] + p["mlp/b2"]
+        new_cache = (new_self, new_cross) if mode != "train" else None
+        return x + m, new_cache, zero
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# segment runner
+# ---------------------------------------------------------------------------
+
+
+def _run_segments(
+    cfg: ModelConfig,
+    params: Mapping[str, Array],
+    x: Array,
+    *,
+    mode: str,
+    positions: Array | None = None,
+    pos: Array | None = None,
+    caches: dict | None = None,
+    segments: tuple[Segment, ...] | None = None,
+    enc_out: Array | None = None,
+    remat: bool = False,
+):
+    """Run the plan. Returns (x, new_caches, total_aux)."""
+    shared = _group_params(params, "shared")
+    plan = segments if segments is not None else build_plan(cfg)
+    new_caches: dict = {}
+    total_aux = jnp.zeros((), jnp.float32)
+
+    for seg in plan:
+        seg_params = []
+        for j, kind in enumerate(seg.kinds):
+            g = _group_params(params, f"segment:{seg.name}:{j}")
+            seg_params.append(g)
+        seg_cache = caches.get(seg.name) if caches else None
+
+        def group_body(carry, xs, _kinds=seg.kinds):
+            xx, aux = carry
+            layer_params, layer_cache = xs
+            out_cache = []
+            for j, kind in enumerate(_kinds):
+                cj = layer_cache[j] if layer_cache is not None else None
+                xx, nc, a = _block_apply(
+                    kind, layer_params[j], xx, cfg,
+                    mode=mode, positions=positions, pos=pos, cache=cj,
+                    shared=shared, enc_out=enc_out,
+                )
+                xx = _constrain(xx)
+                if mode == "prefill":
+                    nc = _constrain_cache(nc)
+                out_cache.append(nc)
+                aux = aux + a
+            ys = tuple(out_cache) if mode != "train" else None
+            return (xx, aux), ys
+
+        body = group_body
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False,
+            )
+        xs = (tuple(seg_params), seg_cache)
+        if cfg.unroll:
+            # Flat-HLO path for roofline calibration (cost analysis counts
+            # while bodies once; unrolled ops are counted exactly).
+            carry = (x, total_aux)
+            ys_list = []
+            for i in range(seg.n):
+                xs_i = jax.tree.map(lambda v: v[i], xs)
+                carry, ys_i = body(carry, xs_i)
+                ys_list.append(ys_i)
+            (x, total_aux) = carry
+            ys = (
+                jax.tree.map(lambda *ls: jnp.stack(ls), *ys_list)
+                if mode != "train" else None
+            )
+        else:
+            (x, total_aux), ys = jax.lax.scan(body, (x, total_aux), xs, length=seg.n)
+        if mode != "train":
+            new_caches[seg.name] = ys
+    return x, new_caches, total_aux
+
+
+# ---------------------------------------------------------------------------
+# top-level model API
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, tokens: Array, *, onehot: bool = False) -> Array:
+    if onehot:
+        # One-hot matmul lookup: a gather from a vocab-sharded table makes
+        # the SPMD partitioner replicate it ("involuntary full
+        # rematerialization", observed on the deepseek MTP path). The
+        # contraction stays sharded and lands on the MXU; extra FLOPs are
+        # 2·T·V·d / shards ≈ the head matmul (a few % of a train step).
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=jnp.dtype(cfg.dtype))
+        e = oh @ params["top|embed"].astype(jnp.dtype(cfg.dtype))
+    else:
+        e = params["top|embed"][tokens]
+    if cfg.family == "dense" and cfg.local_ratio:
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)  # gemma convention
+    return e.astype(jnp.dtype(cfg.dtype))
+
+
+def _head(cfg: ModelConfig, params, x: Array) -> Array:
+    x = rms_norm(x, params["top|final_norm"]) if cfg.family != "encdec" else x
+    if cfg.tie_embeddings:
+        return x @ params["top|embed"].T
+    return x @ params["top|head"]
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Mapping[str, Array],
+    batch: Mapping[str, Array],
+    *,
+    remat: bool = True,
+):
+    """Training forward. Returns (logits, aux_loss, hidden).
+
+    batch keys by family:
+      lm families:  tokens (B,S)
+      vlm:          tokens (B,S_text), img_embeds (B,S_img,d)
+      encdec:       frames (B,S_enc,d)  [stub frontend], tokens (B,S_dec)
+    """
+    if cfg.family == "encdec":
+        return _encdec_forward(cfg, params, batch, remat=remat)
+
+    oh = cfg.vocab_size >= 32768  # one-hot lookup for sharded-vocab tables
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(jnp.dtype(cfg.dtype))
+        tok_e = _embed(cfg, params, batch["tokens"], onehot=oh)
+        x = jnp.concatenate([img, tok_e], axis=1)
+    else:
+        x = _embed(cfg, params, batch["tokens"], onehot=oh)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, aux = _run_segments(
+        cfg, params, x, mode="train", positions=positions, remat=remat
+    )
+    logits = _head(cfg, params, x)
+    return logits, aux, x
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Mapping[str, Array],
+    batch: Mapping[str, Array],
+    *,
+    aux_coef: float = 0.01,
+    remat: bool = True,
+):
+    """Next-token CE (+ MoE balance aux + MTP)."""
+    if cfg.family == "encdec":
+        logits, aux, _ = _encdec_forward(cfg, params, batch, remat=remat)
+        tok = batch["tokens"]
+        loss = cross_entropy_loss(logits[:, :-1], tok[:, 1:])
+        return loss + aux_coef * aux
+
+    logits, aux, hidden = forward(cfg, params, batch, remat=remat)
+    tok = batch["tokens"]
+    if cfg.family == "vlm":
+        # loss only over the text region
+        s_img = batch["img_embeds"].shape[1]
+        logits = logits[:, s_img:]
+    loss = cross_entropy_loss(logits[:, :-1], tok[:, 1:])
+    total = loss + aux_coef * aux
+    if cfg.mtp_depth:
+        total = total + 0.3 * _mtp_loss(cfg, params, hidden, tok)
+    return total
+
+
+def _mtp_loss(cfg: ModelConfig, params, hidden: Array, tokens: Array) -> Array:
+    """DeepSeek-V3 MTP (depth 1): one extra block predicts token t+2 from
+    [norm(h_t); norm(emb(tok_{t+1}))]."""
+    h = hidden[:, :-2]                      # predict t+2 from context at t
+    nxt = _embed(cfg, params, tokens[:, 1:-1], onehot=cfg.vocab_size >= 32768)
+    hcat = jnp.concatenate(
+        [rms_norm(h, params["top|mtp/norm_h"]), rms_norm(nxt, params["top|mtp/norm_e"])],
+        axis=-1,
+    )
+    x = hcat @ params["top|mtp/proj"]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = _group_params(params, "shared")
+    mp = {k[len("mtp_block/"):]: v for k, v in shared.items()
+          if k.startswith("mtp_block/")}
+    x, _, _ = (_block_apply(
+        "attn_mlp", mp, x, cfg, mode="train", positions=positions, pos=None,
+        cache=None, shared=None,
+    ))
+    logits = _head(cfg, params, x)
+    return cross_entropy_loss(logits, tokens[:, 2:])
+
+
+def _encdec_forward(cfg: ModelConfig, params, batch, *, remat: bool):
+    frames = batch["frames"].astype(jnp.dtype(cfg.dtype))  # (B,S_enc,d)
+    b, se, d = frames.shape
+    x = frames + sinusoidal_positions(se, d).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    plan = build_plan(cfg)
+    enc_seg, dec_seg = plan[0], plan[1]
+    x, _, _ = _run_segments(
+        cfg, params, x, mode="train", positions=positions,
+        segments=(enc_seg,), remat=remat,
+    )
+    enc_out = layer_norm(x, params["top|enc_final_s"], params["top|enc_final_b"])
+
+    tok = batch["tokens"]
+    sd = tok.shape[1]
+    y = params["top|embed"][tok].astype(frames.dtype)
+    y = y + sinusoidal_positions(sd, d).astype(frames.dtype)[None]
+    dpos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+    y, _, aux = _run_segments(
+        cfg, params, y, mode="train", positions=dpos,
+        segments=(dec_seg,), enc_out=enc_out, remat=remat,
+    )
+    y = layer_norm(y, params["top|final_norm"], params["top|final_norm_b"])
+    logits = y @ params["top|embed"].T
+    return logits, aux, y
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch: Mapping[str, Array]):
+    """Full forward over the prompt; returns (last-token logits, caches)."""
+    if cfg.family == "encdec":
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        b, se, d = frames.shape
+        x = frames + sinusoidal_positions(se, d).astype(frames.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+        enc_seg, dec_seg = build_plan(cfg)
+        x, _, _ = _run_segments(cfg, params, x, mode="train",
+                                positions=positions, segments=(enc_seg,))
+        enc_out = layer_norm(x, params["top|enc_final_s"], params["top|enc_final_b"])
+        tok = batch["tokens"]
+        sd = tok.shape[1]
+        y = params["top|embed"][tok].astype(frames.dtype)
+        y = y + sinusoidal_positions(sd, d).astype(frames.dtype)[None]
+        dpos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+        y, caches, _ = _run_segments(cfg, params, y, mode="prefill",
+                                     positions=dpos, segments=(dec_seg,),
+                                     enc_out=enc_out)
+        y = layer_norm(y, params["top|final_norm"], params["top|final_norm_b"])
+        logits = y[:, -1:] @ params["top|embed"].T
+        return logits, caches
+
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(jnp.dtype(cfg.dtype))
+        tok_e = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([img, tok_e], axis=1)
+    else:
+        x = _embed(cfg, params, batch["tokens"])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, caches, _ = _run_segments(cfg, params, x, mode="prefill", positions=positions)
+    logits = _head(cfg, params, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens: Array, pos: Array, caches):
+    """One decode step. tokens (B,1); pos () int32; caches from prefill or
+    init_cache. Returns (logits (B,1,V), new caches)."""
+    if cfg.family == "encdec":
+        d = cfg.d_model
+        y = params["top|embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        ang = _sinusoid_at(pos, d).astype(y.dtype)  # sinusoidal position at pos
+        y = y + ang[None, None, :]
+        _, dec_seg = build_plan(cfg)
+        y, caches2, _ = _run_segments(cfg, params, y, mode="decode", pos=pos,
+                                      caches=caches, segments=(dec_seg,))
+        y = layer_norm(y, params["top|final_norm"], params["top|final_norm_b"])
+        return y @ params["top|embed"].T, caches2
+
+    x = _embed(cfg, params, tokens)
+    x, caches2, _ = _run_segments(cfg, params, x, mode="decode", pos=pos, caches=caches)
+    return _head(cfg, params, x), caches2
+
+
+def _sinusoid_at(pos: Array, d: int) -> Array:
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# cache construction (zeros or ShapeDtypeStructs for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache_spec(kind: str, cfg: ModelConfig, b: int, smax: int, enc_len: int):
+    """Shape tuples for one block's cache (no leading segment axis)."""
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if kind in ("attn_mlp", "attn_local", "attn_moe", "shared_attn"):
+        if cfg.mla and kind != "shared_attn":
+            return (
+                ((b, smax, cfg.kv_lora_rank), dt),
+                ((b, smax, cfg.qk_rope_dim), dt),
+            )
+        t = min(cfg.window, smax) if (kind == "attn_local" and cfg.window) else smax
+        return (((b, t, kv, hd), dt), ((b, t, kv, hd), dt))
+    if kind == "mamba":
+        d_in = cfg.ssm_expand * cfg.d_model
+        heads = d_in // 64
+        return (
+            ((b, heads, cfg.ssm_state, 64), jnp.float32),
+            ((b, cfg.ssm_conv - 1, d_in + 2 * cfg.ssm_state), dt),
+        )
+    if kind == "mlstm":
+        d_in = 2 * cfg.d_model
+        heads = cfg.n_heads
+        hd2 = d_in // heads
+        return (
+            ((b, heads, hd2, hd2), jnp.float32),
+            ((b, heads, hd2), jnp.float32),
+            ((b, heads), jnp.float32),
+            ((b, 3, d_in), dt),
+        )
+    if kind == "slstm":
+        heads = cfg.n_heads
+        hd2 = cfg.d_model // heads
+        shp = ((b, heads, hd2), jnp.float32)
+        return (shp, shp, shp, shp)
+    if kind == "dec_block":
+        self_c = (((b, smax, kv, hd), dt), ((b, smax, kv, hd), dt))
+        cross_c = (((b, enc_len, kv, hd), dt), ((b, enc_len, kv, hd), dt))
+        return (self_c, cross_c)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, b: int, smax: int, *, enc_len: int = 0,
+               abstract: bool = False):
+    """Zeroed (or abstract) cache pytree matching _run_segments layout."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+
+    def build(spec):
+        if isinstance(spec, tuple) and spec and isinstance(spec[0], tuple) and (
+            spec and isinstance(spec[0][0], tuple)
+        ):
+            # nested tuple (dec_block)
+            return tuple(build(s) for s in spec)
+        shape, dt = spec
+        return mk(shape, dt)
+
+    caches = {}
+    plan = build_plan(cfg)
+    if cfg.family == "encdec":
+        plan = (plan[1],)  # only the decoder holds cache
+    for seg in plan:
+        blocks = []
+        for kind in seg.kinds:
+            spec = _kind_cache_spec(kind, cfg, b, smax, enc_len)
+            if kind == "dec_block":
+                entry = (tuple(build(s) for s in spec[0]),
+                         tuple(build(s) for s in spec[1]))
+            else:
+                entry = tuple(build(s) for s in spec)
+            # prepend segment axis
+            entry = jax.tree.map(
+                lambda l: (jax.ShapeDtypeStruct((seg.n,) + l.shape, l.dtype)
+                           if abstract else jnp.zeros((seg.n,) + l.shape, l.dtype)),
+                entry,
+            )
+            blocks.append(entry)
+        caches[seg.name] = tuple(blocks)
+    return caches

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP over `model`).
+
+TPUs have no fast scatter, and the naive one-hot dispatch einsum costs
+O(T * E * C * d) — dead FLOPs that would swamp the roofline for 256-expert
+models. Instead we sort token-slots by expert id, place them into an
+(E, capacity, d) buffer with position-in-expert indices derived from a
+cumulative histogram (drop-on-overflow, like GShard/Switch with
+capacity_factor), run the expert FFNs as one batched einsum over the E axis
+(sharded over `model` = expert parallelism), and combine back with the
+routing weights. All data movement is gather/scatter (O(T*k*d) bytes), all
+FLOPs are the honest active-expert compute: E*C ≈ T*top_k*capacity_factor.
+
+Routers:
+  softmax  — softmax probs -> top-k -> renormalized weights (Qwen3-MoE).
+  sigmoid  — per-expert sigmoid scores; top-k chosen on score + a learned
+             balancing bias (aux-loss-free, DeepSeek-V3); weights are the
+             unbiased scores renormalized over the chosen experts.
+
+A switch-style load-balance loss is returned for the softmax router
+(coefficient applied by the caller); the sigmoid router returns the mean
+violation statistic used to adapt the bias (reported, not back-propagated).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Table
+
+Array = jax.Array
+
+
+def moe_table(cfg: ModelConfig) -> Table:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_moe
+    t: Table = {
+        "router": ((d, e), ("embed", None), "normal"),
+        "wg": ((e, d, ff), ("experts", "embed", "mlp"), "normal"),
+        "wu": ((e, d, ff), ("experts", "embed", "mlp"), "normal"),
+        "wd": ((e, ff, d), ("experts", "mlp", "embed"), "normal"),
+    }
+    if cfg.router_type == "sigmoid":
+        t["router_bias"] = ((e,), (None,), "zeros")
+    if cfg.n_shared_experts:
+        sf = cfg.d_ff_moe * cfg.n_shared_experts
+        t["shared/wg"] = ((d, sf), ("embed", "mlp"), "normal")
+        t["shared/wu"] = ((d, sf), ("embed", "mlp"), "normal")
+        t["shared/wd"] = ((sf, d), ("mlp", "embed"), "normal")
+    return t
+
+
+def _route(p: Mapping[str, Array], pre: str, x: Array, cfg: ModelConfig):
+    """x (T, d) -> (weights (T, k), expert_ids (T, k), aux_loss ())."""
+    logits = (x.astype(jnp.float32)) @ p[f"{pre}router"].astype(jnp.float32)
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        biased = scores + p[f"{pre}router_bias"].astype(jnp.float32)[None, :]
+        _, ids = jax.lax.top_k(biased, cfg.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+        # Report load imbalance (drives the bias update on the host side).
+        load = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+        aux = jnp.sum((load - 1.0 / cfg.n_experts) ** 2)
+        return w, ids, aux
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    # Switch-style balance loss: E * <f_e * P_e>.
+    f = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(f * pmean)
+    return w, ids, aux
+
+
+def _dispatch_group(xt, w, ids, wg, wu, wd, cap: int, e: int, k: int):
+    """Sort-dispatch one token group. xt (Tg, d); w/ids (Tg, k)."""
+    t = xt.shape[0]
+    flat_e = ids.reshape(-1)                        # (Tg*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_w = w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                     # group-LOCAL sort
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sw = flat_w[order]
+
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap
+    dest = se * cap + jnp.where(keep, pos_in_e, 0)
+
+    xs = xt[stok]
+    buf = jnp.zeros((e * cap, xt.shape[1]), xt.dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], xs, 0.0))
+    buf = buf.reshape(e, cap, xt.shape[1])
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * cap, -1)
+
+    ys = yb[dest] * (keep[:, None] * sw[:, None]).astype(yb.dtype)
+    return jnp.zeros_like(xt).at[stok].add(ys)
+
+
+def moe_forward(
+    p: Mapping[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+    capacity_factor: float | None = None,
+):
+    """x (B, S, d) -> (y (B, S, d), aux_loss ()).
+
+    Tokens are split into ``G`` groups and sort-dispatched *group-locally*
+    (vmapped): a single global argsort over 1M token-slots cannot be
+    partitioned by GSPMD and forces full replication of the dispatch
+    tensors (observed: +90 GB/device on deepseek train). With groups
+    sharded over the DP axes and experts over `model`, every dispatch
+    tensor stays distributed. Capacity is per group (more drops under
+    skew — the standard GShard/MaxText trade; the balance losses keep
+    skew small).
+    """
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    cf = capacity_factor or cfg.capacity_factor
+
+    # group count: honor cfg.moe_groups but keep >= ~2k tokens per group
+    # and divide T evenly.
+    groups = min(cfg.moe_groups, max(1, t // 2048))
+    while t % groups:
+        groups -= 1
+    tg = t // groups
+    cap = min(max(1, int(-(-tg * k * cf // e))), tg)
+
+    xt = x.reshape(t, d)
+    w, ids, aux = _route(p, pre, xt, cfg)  # (T,k), (T,k)
+
+    # The (G, Tg, d) regrouping is 3D again: re-pin it to the activation
+    # sharding (groups over DP). The (T, d) flatten escapes the block-level
+    # constraint and GSPMD otherwise replicates the dispatch stream
+    # (+~180 GB/device on deepseek prefill; EXPERIMENTS.md It.2c).
+    from repro.models import model as _model
+    xg = _model._constrain(xt.reshape(groups, tg, d))
+    wg_ = w.reshape(groups, tg, k)
+    ig = ids.reshape(groups, tg, k)
+    y = jax.vmap(
+        lambda xx, ww, ii: _dispatch_group(
+            xx, ww, ii, p[f"{pre}wg"], p[f"{pre}wu"], p[f"{pre}wd"],
+            cap, e, k)
+    )(xg, wg_, ig)
+    y = _model._constrain(y)
+    y = y.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        gs = xt @ p[f"{pre}shared/wg"]
+        us = xt @ p[f"{pre}shared/wu"]
+        y = y + ((jax.nn.silu(gs) * us) @ p[f"{pre}shared/wd"]).reshape(b, s, d)
+    return y, aux

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) blocks — chunked-parallel training, O(1)-state decode.
+
+Training/prefill runs the SSD chunkwise algorithm: the sequence is split
+into chunks of ``ssm_chunk``; intra-chunk interactions are dense
+attention-like matmuls (MXU-friendly), inter-chunk interactions flow through
+the (H, N, P) state carried by a short ``lax.scan`` over chunks. Decode is
+the pure recurrence: state' = exp(dt*A) state + dt * B ⊗ x.
+
+This is the TPU-native adaptation of the CUDA SSD kernel: the chunk
+decomposition is the same, but instead of a fused kernel we emit batched
+einsums XLA maps onto the MXU, and the scan carries only the O(B*H*N*P)
+state (DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Table, rms_norm
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    hd = 64
+    heads = d_in // hd
+    return d_in, heads, hd, cfg.ssm_state
+
+
+def mamba_table(cfg: ModelConfig) -> Table:
+    d = cfg.d_model
+    d_in, heads, _, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        # in_proj -> [z (d_in), xBC (d_in + 2N), dt (H)]
+        "in_proj": ((d, 2 * d_in + 2 * n + heads), ("embed", "mlp"), "normal"),
+        "conv_w": ((cfg.ssm_conv, conv_ch), (None, "mlp"), "normal"),
+        "conv_b": ((conv_ch,), ("mlp",), "zeros"),
+        "a_log": ((heads,), (None,), "ssm_a"),
+        "d_skip": ((heads,), (None,), "ones"),
+        "dt_bias": ((heads,), (None,), "ssm_dt"),
+        "norm": ((d_in,), ("mlp",), "ones"),
+        "out_proj": ((d_in, d), ("mlp", "embed"), "normal"),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],  # (W, 1, C) — depthwise via feature_group_count
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def _ssd_chunked(x, dt, a, b_in, c_in, chunk: int, state0=None):
+    """SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) [negative],
+    b_in/c_in (B,S,N). Returns y (B,S,H,P), final state (B,H,N,P).
+    """
+    bsz, s_orig, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        # Padding steps carry dt=0: decay exp(0)=1 and zero contribution, so
+        # the final state is exact; padded y rows are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    f32 = jnp.float32
+
+    xc = x.reshape(bsz, nc, q, h, p_dim).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b_in.reshape(bsz, nc, q, n).astype(f32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(f32)
+
+    da = dtc * a[None, None, None, :]           # (B,nc,Q,H) negative increments
+    cs = jnp.cumsum(da, axis=2)                  # inclusive cumsum within chunk
+    total = cs[:, :, -1, :]                      # (B,nc,H)
+
+    xdt = xc * dtc[..., None]                    # (B,nc,Q,H,P)
+
+    # Intra-chunk (block-diagonal) term.
+    gmat = jnp.einsum("bcqn,bckn->bcqk", cc, bc)            # (B,nc,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    m = jnp.where(tri, gmat[..., None] * decay, 0.0)        # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xdt)
+
+    # Per-chunk state contribution: sum_j exp(total - cs_j) dt_j B_j x_j^T.
+    w_state = jnp.exp(total[:, :, None, :] - cs)            # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchnp", bc, w_state * dtc, xc)
+
+    # Inter-chunk recurrence over nc.
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, n, p_dim), f32)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_c, tot = inp  # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s_chunk_t = jnp.moveaxis(s_chunk, 1, 0)   # (nc,B,H,N,P)
+    total_t = jnp.moveaxis(total, 1, 0)       # (nc,B,H)
+    final_state, s_prevs = jax.lax.scan(scan_fn, state0, (s_chunk_t, total_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)     # (B,nc,H,N,P) state at chunk start
+
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cc, s_prevs, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p_dim)[:, :s_orig]
+    return y, final_state
+
+
+def mamba_forward(
+    p: Mapping[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+    return_cache: bool = False,
+):
+    """Train/prefill. x (B,S,d). Cache = (ssm_state (B,H,N,P), conv_tail)."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz, s, _ = x.shape
+    d_in, heads, hd, n = _dims(cfg)
+
+    zxbcdt = x @ p[f"{pre}in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc_raw = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_pre = zxbcdt[..., 2 * d_in + 2 * n :]
+
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p[f"{pre}conv_w"], p[f"{pre}conv_b"]))
+    xs = xbc[..., :d_in].reshape(bsz, s, heads, hd)
+    b_in = xbc[..., d_in : d_in + n]
+    c_in = xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(
+        dt_pre.astype(jnp.float32) + p[f"{pre}dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p[f"{pre}a_log"].astype(jnp.float32))
+
+    y, state = _ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm_chunk)
+    y = y + p[f"{pre}d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p[f"{pre}norm"])
+    out = y @ p[f"{pre}out_proj"]
+    if return_cache:
+        # conv ring: last (width-1) *pre-conv* channel rows.
+        width = cfg.ssm_conv
+        tail = xbc_raw[:, -(width - 1) :, :]
+        pad = (width - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, (state, tail)
+    return out
+
+
+def mamba_decode(
+    p: Mapping[str, Array],
+    x: Array,
+    cache: tuple[Array, Array],
+    cfg: ModelConfig,
+    *,
+    prefix: str = "",
+):
+    """One-token recurrence. x (B,1,d); cache (state (B,H,N,P), conv_tail)."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz = x.shape[0]
+    d_in, heads, hd, n = _dims(cfg)
+    state, conv_tail = cache  # conv_tail (B, width-1, C)
+
+    zxbcdt = x[:, 0, :] @ p[f"{pre}in_proj"]  # (B, *)
+    z = zxbcdt[..., :d_in]
+    xbc_new = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_pre = zxbcdt[..., 2 * d_in + 2 * n :]
+
+    # causal depthwise conv over [tail, new]
+    w = p[f"{pre}conv_w"]  # (W, C)
+    hist = jnp.concatenate([conv_tail, xbc_new[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p[f"{pre}conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_tail = hist[:, 1:, :]
+
+    xs = xbc[..., :d_in].reshape(bsz, heads, hd)
+    b_in = xbc[..., d_in : d_in + n]
+    c_in = xbc[..., d_in + n :]
+    dt = jax.nn.softplus(
+        dt_pre.astype(jnp.float32) + p[f"{pre}dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(p[f"{pre}a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+
+    upd = jnp.einsum("bn,bh,bhp->bhnp", b_in.astype(jnp.float32), dt, xs.astype(jnp.float32))
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), state)
+    y = y + p[f"{pre}d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p[f"{pre}norm"])
+    out = (y @ p[f"{pre}out_proj"])[:, None, :]
+    return out, (state, new_tail)

@@ -1,0 +1,315 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM — matrix memory C (B,H,hd,hd) with exponential input gates and
+stabilizer state m. Training uses the chunkwise form: within a chunk of Q
+steps the contribution weights exp(F_t - F_s + i_s) form a (Q,Q) lower-
+triangular matrix computed with cumsum/cummax stabilization (all MXU
+matmuls); across chunks only (C, n, m) is carried by a lax.scan. Decode is
+the plain recurrence.
+
+sLSTM — scalar memory per head with block-diagonal recurrent weights; the
+recurrence on h_{t-1} makes it inherently sequential (the xLSTM paper says
+as much), so training scans over time. The assigned xlstm-1.3b uses a 7:1
+mLSTM:sLSTM ratio, so the sequential tax applies to 1/8 of layers.
+
+Both blocks are residual pre-norm and carry their own up/down projections
+(the assigned config has d_ff = 0: there are no separate MLP blocks).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Table, rms_norm
+
+Array = jax.Array
+
+
+def _mdims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    heads = cfg.n_heads
+    hd = d_in // heads
+    return d_in, heads, hd
+
+
+def mlstm_table(cfg: ModelConfig) -> Table:
+    d = cfg.d_model
+    d_in, heads, hd = _mdims(cfg)
+    return {
+        "up_x": ((d, d_in), ("embed", "mlp"), "normal"),
+        "up_z": ((d, d_in), ("embed", "mlp"), "normal"),
+        "conv_w": ((4, d_in), (None, "mlp"), "normal"),
+        "conv_b": ((d_in,), ("mlp",), "zeros"),
+        "wq": ((d_in, d_in), ("mlp", "heads"), "normal"),
+        "wk": ((d_in, d_in), ("mlp", "heads"), "normal"),
+        "wv": ((d_in, d_in), ("mlp", "heads"), "normal"),
+        "wi": ((d_in, heads), ("mlp", None), "normal"),
+        "wf": ((d_in, heads), ("mlp", None), "normal"),
+        "fb": ((heads,), (None,), "ones"),   # forget bias > 0 at init
+        "norm": ((d_in,), ("mlp",), "ones"),
+        "down": ((d_in, d), ("mlp", "embed"), "normal"),
+    }
+
+
+def slstm_table(cfg: ModelConfig) -> Table:
+    d = cfg.d_model
+    heads = cfg.n_heads
+    hd = d // heads
+    ff = int(d * 4 / 3) // 64 * 64 * 2  # GLU pair, PF 4/3 (xLSTM paper)
+    t: Table = {
+        "wi": ((d, d), ("embed", "heads"), "normal"),
+        "wf": ((d, d), ("embed", "heads"), "normal"),
+        "wz": ((d, d), ("embed", "heads"), "normal"),
+        "wo": ((d, d), ("embed", "heads"), "normal"),
+        "ri": ((heads, hd, hd), (None, None, None), "normal"),
+        "rf": ((heads, hd, hd), (None, None, None), "normal"),
+        "rz": ((heads, hd, hd), (None, None, None), "normal"),
+        "ro": ((heads, hd, hd), (None, None, None), "normal"),
+        "fb": ((heads, hd), (None, None), "ones"),
+        "norm": ((d,), ("embed",), "ones"),
+        "ff_up": ((d, ff), ("embed", "mlp"), "normal"),
+        "ff_down": ((ff // 2, d), ("mlp", "embed"), "normal"),
+    }
+    return t
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int, cache=None):
+    """q,k,v (B,S,H,hd); log_i/log_f (B,S,H). Returns y, (C, n, m) final.
+
+    Stabilized chunkwise recurrence; see module docstring.
+    """
+    bsz, s_orig, h, hd = q.shape
+    qn = min(chunk, s_orig)
+    pad = (-s_orig) % qn
+    if pad:
+        # Padding steps: log_f=0 (no decay), log_i=-inf (no contribution);
+        # k,v are zero so the state is exact; padded y rows sliced off below.
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, z4) for t in (q, k, v))
+        log_i = jnp.pad(log_i, z3, constant_values=-1e30)
+        log_f = jnp.pad(log_f, z3)
+    s = s_orig + pad
+    nc = s // qn
+    f32 = jnp.float32
+
+    qc = q.reshape(bsz, nc, qn, h, hd).astype(f32) * (hd ** -0.5)
+    kc = k.reshape(bsz, nc, qn, h, hd).astype(f32)
+    vc = v.reshape(bsz, nc, qn, h, hd).astype(f32)
+    li = log_i.reshape(bsz, nc, qn, h).astype(f32)
+    lf = log_f.reshape(bsz, nc, qn, h).astype(f32)
+
+    fcum = jnp.cumsum(lf, axis=2)                # F_t inclusive
+    a_s = li - fcum                              # a_s = i_s - F_s
+    amax = jax.lax.cummax(a_s, axis=2)           # running max of a
+    ftot = fcum[:, :, -1, :]                     # (B,nc,H)
+
+    if cache is None:
+        c0 = jnp.zeros((bsz, h, hd, hd), f32)
+        n0 = jnp.zeros((bsz, h, hd), f32)
+        m0 = jnp.full((bsz, h), -1e30, f32)
+    else:
+        c0, n0, m0 = cache
+
+    def chunk_step(carry, inp):
+        c_hat, n_hat, m_state = carry
+        qq, kk, vv, li_, lf_, fcum_, a_, amax_, ftot_ = inp
+        # (B,Q,H) row stabilizer: m_t = F_t + max(cummax_a_t, m_state - 0)
+        m_row = fcum_ + jnp.maximum(amax_, m_state[:, None, :])
+        # intra weights: exp(F_t - F_s + i_s - m_t) for s<=t
+        wmat = jnp.exp(
+            fcum_[:, :, None, :] + a_[:, None, :, :] - m_row[:, :, None, :]
+        )  # (B,Q_t,Q_s,H)
+        tri = jnp.tril(jnp.ones((qn, qn), bool))[None, :, :, None]
+        wmat = jnp.where(tri, wmat, 0.0)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qq, kk) * wmat
+        num_intra = jnp.einsum("bqkh,bkhd->bqhd", scores, vv)
+        den_intra = jnp.sum(scores, axis=2)  # (B,Q,H)
+        # inter: exp(F_t + m_state - m_t) q C_hat
+        w_in = jnp.exp(fcum_ + m_state[:, None, :] - m_row)  # (B,Q,H)
+        num_inter = jnp.einsum("bqhd,bhde->bqhe", qq, c_hat) * w_in[..., None]
+        den_inter = jnp.einsum("bqhd,bhd->bqh", qq, n_hat) * w_in
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den)[..., None], jnp.exp(-m_row)[..., None] + 1e-6)
+        # state update to end of chunk: m' = F_Q + max(max_s a_s, m_state)
+        m_new = ftot_ + jnp.maximum(jnp.max(a_, axis=1), m_state)
+        w_st = jnp.exp(ftot_[:, None, :] + a_ - m_new[:, None, :])  # (B,Q,H)
+        c_hat = c_hat * jnp.exp(m_state + ftot_ - m_new)[:, :, None, None] + jnp.einsum(
+            "bkh,bkhd,bkhe->bhde", w_st, kk, vv
+        )
+        n_hat = n_hat * jnp.exp(m_state + ftot_ - m_new)[:, :, None] + jnp.einsum(
+            "bkh,bkhd->bhd", w_st, kk
+        )
+        return (c_hat, n_hat, m_new), y
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (qc, kc, vc, li, lf, fcum, a_s, amax, ftot)
+    )
+    (c_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, hd)[:, :s_orig]
+    return y, (c_f, n_f, m_f)
+
+
+def mlstm_forward(
+    p: Mapping[str, Array], x: Array, cfg: ModelConfig, *, prefix: str = "",
+    return_cache: bool = False,
+):
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz, s, _ = x.shape
+    d_in, heads, hd = _mdims(cfg)
+    xa = x @ p[f"{pre}up_x"]
+    z = x @ p[f"{pre}up_z"]
+    conv = jax.nn.silu(_causal_conv(xa, p[f"{pre}conv_w"], p[f"{pre}conv_b"]))
+    q = (conv @ p[f"{pre}wq"]).reshape(bsz, s, heads, hd)
+    k = (conv @ p[f"{pre}wk"]).reshape(bsz, s, heads, hd)
+    v = (xa @ p[f"{pre}wv"]).reshape(bsz, s, heads, hd)
+    log_i = (xa @ p[f"{pre}wi"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xa @ p[f"{pre}wf"]).astype(jnp.float32) + p[f"{pre}fb"].astype(jnp.float32)
+    )
+    y, cache = _mlstm_chunked(q, k, v, log_i, log_f, cfg.ssm_chunk or 64)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = rms_norm(y, p[f"{pre}norm"]) * jax.nn.silu(z)
+    out = y @ p[f"{pre}down"]
+    if return_cache:
+        width = p[f"{pre}conv_w"].shape[0]
+        tail = xa[:, -(width - 1) :, :]
+        padn = (width - 1) - tail.shape[1]
+        if padn > 0:
+            tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
+        return out, cache + (tail,)
+    return out
+
+
+def mlstm_decode(
+    p: Mapping[str, Array], x: Array, cache, cfg: ModelConfig, *, prefix: str = "",
+):
+    """x (B,1,d); cache (C, n, m, conv_tail)."""
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz = x.shape[0]
+    d_in, heads, hd = _mdims(cfg)
+    c_hat, n_hat, m_state, conv_tail = cache
+    xa = x[:, 0, :] @ p[f"{pre}up_x"]
+    z = x[:, 0, :] @ p[f"{pre}up_z"]
+    w = p[f"{pre}conv_w"]
+    hist = jnp.concatenate([conv_tail, xa[:, None, :]], axis=1)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + p[f"{pre}conv_b"])
+    new_tail = hist[:, 1:, :]
+    q = (conv @ p[f"{pre}wq"]).reshape(bsz, heads, hd).astype(jnp.float32) * (hd ** -0.5)
+    k = (conv @ p[f"{pre}wk"]).reshape(bsz, heads, hd).astype(jnp.float32)
+    v = (xa @ p[f"{pre}wv"]).reshape(bsz, heads, hd).astype(jnp.float32)
+    log_i = (xa @ p[f"{pre}wi"]).astype(jnp.float32)  # (B,H)
+    log_f = jax.nn.log_sigmoid(
+        (xa @ p[f"{pre}wf"]).astype(jnp.float32) + p[f"{pre}fb"].astype(jnp.float32)
+    )
+    m_new = jnp.maximum(log_f + m_state, log_i)
+    fw = jnp.exp(log_f + m_state - m_new)
+    iw = jnp.exp(log_i - m_new)
+    c_hat = c_hat * fw[:, :, None, None] + iw[:, :, None, None] * k[:, :, :, None] * v[:, :, None, :]
+    n_hat = n_hat * fw[:, :, None] + iw[:, :, None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_hat)
+    den = jnp.einsum("bhd,bhd->bh", q, n_hat)
+    y = num / jnp.maximum(jnp.abs(den)[..., None], jnp.exp(-m_new)[..., None] + 1e-6)
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = rms_norm(y, p[f"{pre}norm"]) * jax.nn.silu(z)
+    out = (y @ p[f"{pre}down"])[:, None, :]
+    return out, (c_hat, n_hat, m_new, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_cell(p, pre, xg, h_prev, c_prev, n_prev, m_prev, heads, hd):
+    """xg: dict of per-gate inputs at step t (B,H,hd)."""
+    rec = lambda w, h: jnp.einsum("bhd,hde->bhe", h, w)
+    i_pre = xg["i"] + rec(p[f"{pre}ri"], h_prev)
+    f_pre = xg["f"] + rec(p[f"{pre}rf"], h_prev) + p[f"{pre}fb"]
+    z_pre = xg["z"] + rec(p[f"{pre}rz"], h_prev)
+    o_pre = xg["o"] + rec(p[f"{pre}ro"], h_prev)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m_prev, i_pre)
+    iw = jnp.exp(i_pre - m_new)
+    fw = jnp.exp(log_f + m_prev - m_new)
+    c_new = fw * c_prev + iw * jnp.tanh(z_pre)
+    n_new = fw * n_prev + iw
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(
+    p: Mapping[str, Array], x: Array, cfg: ModelConfig, *, prefix: str = "",
+    return_cache: bool = False,
+):
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz, s, d = x.shape
+    heads = cfg.n_heads
+    hd = d // heads
+    f32 = jnp.float32
+    gates_in = {
+        g: (x @ p[f"{pre}w{g}"]).reshape(bsz, s, heads, hd).astype(f32)
+        for g in ("i", "f", "z", "o")
+    }
+    h0 = jnp.zeros((bsz, heads, hd), f32)
+    c0 = jnp.zeros((bsz, heads, hd), f32)
+    n0 = jnp.zeros((bsz, heads, hd), f32)
+    m0 = jnp.full((bsz, heads, hd), -1e30, f32)
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        xg = {k: v for k, v in zip(("i", "f", "z", "o"), inp)}
+        h, c, n, m = _slstm_cell(p, pre, xg, h, c, n, m, heads, hd)
+        return (h, c, n, m), h
+
+    xs = tuple(jnp.moveaxis(gates_in[g], 1, 0) for g in ("i", "f", "z", "o"))
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    y = rms_norm(y, p[f"{pre}norm"])
+    up = y @ p[f"{pre}ff_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p[f"{pre}ff_down"]
+    if return_cache:
+        return out, (h, c, n, m)
+    return out
+
+
+def slstm_decode(
+    p: Mapping[str, Array], x: Array, cache, cfg: ModelConfig, *, prefix: str = "",
+):
+    pre = f"{prefix}" if not prefix else f"{prefix}/"
+    bsz, _, d = x.shape
+    heads = cfg.n_heads
+    hd = d // heads
+    h, c, n, m = cache
+    xg = {
+        g: (x[:, 0, :] @ p[f"{pre}w{g}"]).reshape(bsz, heads, hd).astype(jnp.float32)
+        for g in ("i", "f", "z", "o")
+    }
+    h, c, n, m = _slstm_cell(p, pre, xg, h, c, n, m, heads, hd)
+    y = h.reshape(bsz, d).astype(x.dtype)
+    y = rms_norm(y, p[f"{pre}norm"])
+    up = y @ p[f"{pre}ff_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = ((jax.nn.gelu(a) * b) @ p[f"{pre}ff_down"])[:, None, :]
+    return out, (h, c, n, m)

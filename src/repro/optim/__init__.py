@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    make_optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "make_optimizer",
+    "clip_by_global_norm", "cosine_schedule",
+]

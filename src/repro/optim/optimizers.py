@@ -1,0 +1,198 @@
+"""Optimizers, from scratch (no optax dependency): AdamW and Adafactor.
+
+AdamW keeps f32 (m, v) — the default for <=110B-class models on the
+production mesh. Adafactor keeps a factored second moment (row/col vectors
+for every >=2D weight) and no first moment — the standard mitigation for
+671B-class models where AdamW state cannot fit 16 GB/chip HBM even fully
+sharded (DESIGN.md SS4). Optimizer state inherits each parameter's
+PartitionSpec (rows/cols inherit the matching single axis), so state shards
+exactly like the weights (ZeRO-style by construction under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree]]
+    # state_specs(param_specs) -> state PartitionSpec pytree
+    state_specs: Callable[[PyTree], PyTree]
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: Array
+    m: PyTree
+    v: PyTree
+
+
+def adamw(
+    lr: float | Callable[[Array], Array] = 3e-4,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state, params, _unused_step=None):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mh = m2 / b1c
+            vh = v2 / b2c
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamState(step, new_m, new_v)
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+        return AdamState(P(), jax.tree.map(lambda s: s, param_specs),
+                         jax.tree.map(lambda s: s, param_specs))
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, beta1=0)
+# ---------------------------------------------------------------------------
+
+
+class FactoredSlot(NamedTuple):
+    row: Array   # (..., n) mean over last dim
+    col: Array   # (..., m) mean over second-to-last dim
+    full: Array  # scalar-shaped placeholder or full v for <2D params
+
+
+class AdafactorState(NamedTuple):
+    step: Array
+    slots: PyTree  # FactoredSlot per leaf
+
+
+def adafactor(
+    lr: float | Callable[[Array], Array] = 1e-2,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def slot(p):
+            if _factored(p):
+                return FactoredSlot(
+                    row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    full=jnp.zeros((), jnp.float32),
+                )
+            return FactoredSlot(
+                row=jnp.zeros((), jnp.float32),
+                col=jnp.zeros((), jnp.float32),
+                full=jnp.zeros(p.shape, jnp.float32),
+            )
+        return AdafactorState(jnp.zeros((), jnp.int32), jax.tree.map(slot, params))
+
+    def update(grads, state, params, _unused=None):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                row = beta2 * s.row + (1 - beta2) * jnp.mean(g2, axis=-1)
+                col = beta2 * s.col + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row / jnp.maximum(rmean, eps))[..., None] * col[..., None, :]
+                u = g / jnp.sqrt(jnp.maximum(vhat, eps))
+                new_s = FactoredSlot(row, col, s.full)
+            else:
+                full = beta2 * s.full + (1 - beta2) * g2
+                u = g / jnp.sqrt(jnp.maximum(full, eps))
+                new_s = FactoredSlot(s.row, s.col, full)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        out = jax.tree.map(
+            upd, grads, state.slots, params,
+            is_leaf=lambda x: isinstance(x, FactoredSlot),
+        )
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
+            x[1], FactoredSlot)
+        new_p = jax.tree.map(lambda x: x[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda x: x[1], out, is_leaf=is_pair)
+        return new_p, AdafactorState(step, new_s)
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def slot_spec(spec):
+            axes = tuple(spec) if spec is not None else ()
+            row = P(*axes[:-1]) if len(axes) >= 2 else P()
+            col = P(*(axes[:-2] + axes[-1:])) if len(axes) >= 2 else P()
+            full = P() if len(axes) >= 2 else (P(*axes) if axes else P())
+            return FactoredSlot(row, col, full)
+
+        return AdafactorState(
+            P(), jax.tree.map(slot_spec, param_specs,
+                              is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)),
+        )
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(kind: str, lr=None) -> Optimizer:
+    if kind == "adamw":
+        return adamw(lr if lr is not None else 3e-4)
+    if kind == "adafactor":
+        return adafactor(lr if lr is not None else 1e-2)
+    raise ValueError(kind)

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig, StepFailure
+
+__all__ = ["Trainer", "TrainerConfig", "StepFailure"]

@@ -1,0 +1,24 @@
+import os
+
+# Tests run on the single host CPU device; the 512-device override belongs
+# ONLY to launch/dryrun.py (sub-process tests set their own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def blobs(rng):
+    """5 tight gaussian blobs in 8-d: global optimum ~ m * d * sigma^2."""
+    centers = rng.uniform(-10, 10, size=(5, 8))
+    x = np.concatenate(
+        [c + rng.normal(scale=0.5, size=(1200, 8)) for c in centers]
+    ).astype(np.float32)
+    rng.shuffle(x)
+    return x

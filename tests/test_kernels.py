@@ -1,0 +1,128 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 3, 4),       # tiny, everything padded
+    (100, 7, 33),    # ragged in all dims
+    (256, 128, 256), # exactly one tile
+    (300, 130, 300), # just over one tile
+    (1024, 16, 768), # tall: CORD-19-like dims
+]
+DTYPES = [np.float32, np.bfloat16] if hasattr(np, "bfloat16") else [np.float32]
+
+
+def _mk(s, k, d, dtype=np.float32, seed=0):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(s, d)).astype(np.float32)
+    c = r.normal(size=(k, d)).astype(np.float32)
+    return jnp.asarray(x, dtype), jnp.asarray(c, dtype)
+
+
+@pytest.mark.parametrize("s,k,d", SHAPES)
+def test_assign_matches_ref(s, k, d):
+    x, c = _mk(s, k, d)
+    i_ref, d_ref = ref.assign_ref(x, c)
+    i_pal, d_pal = ops.assign_clusters(x, c, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pal))
+    np.testing.assert_allclose(
+        np.asarray(d_ref), np.asarray(d_pal), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("s,k,d", SHAPES)
+def test_cluster_sums_matches_ref(s, k, d):
+    x, c = _mk(s, k, d)
+    idx, _ = ref.assign_ref(x, c)
+    s_ref, n_ref = ref.cluster_sums_ref(x, idx, k)
+    s_pal, n_pal = ops.cluster_sums(x, idx, k, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(n_ref), np.asarray(n_pal))
+    np.testing.assert_allclose(
+        np.asarray(s_ref), np.asarray(s_pal), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_assign_bf16_inputs():
+    x, c = _mk(64, 9, 40, dtype=jnp.bfloat16)
+    i_ref, _ = ref.assign_ref(x, c)
+    i_pal, _ = ops.assign_clusters(x, c, impl="interpret")
+    # bf16 rounding can flip genuinely ambiguous rows; demand 99% agreement
+    agree = np.mean(np.asarray(i_ref) == np.asarray(i_pal))
+    assert agree > 0.99
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    s=st.integers(2, 64), k=st.integers(1, 17), d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_is_true_argmin(s, k, d, seed):
+    """Property: returned index minimizes the exact distance, and the
+    returned distance equals that minimum (within fp tolerance)."""
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(s, d)).astype(np.float32)
+    c = r.normal(size=(k, d)).astype(np.float32)
+    idx, dist = ops.assign_clusters(jnp.asarray(x), jnp.asarray(c), impl="interpret")
+    d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    best = d2.min(1)
+    np.testing.assert_allclose(np.asarray(dist), best, rtol=1e-3, atol=1e-3)
+    chosen = d2[np.arange(s), np.asarray(idx)]
+    np.testing.assert_allclose(chosen, best, rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    s=st.integers(1, 80), k=st.integers(1, 9), seed=st.integers(0, 2**31 - 1),
+)
+def test_cluster_sums_partition_property(s, k, seed):
+    """Property: sums over clusters == total sum; counts sum to s."""
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(s, 7)).astype(np.float32)
+    idx = r.integers(0, k, size=s).astype(np.int32)
+    sums, counts = ops.cluster_sums(
+        jnp.asarray(x), jnp.asarray(idx), k, impl="interpret"
+    )
+    np.testing.assert_allclose(
+        np.asarray(sums).sum(0), x.sum(0), rtol=1e-4, atol=1e-4
+    )
+    assert np.asarray(counts).sum() == s
+
+
+def test_assign_padding_never_wins():
+    """Padded centroid rows (k not tile-aligned) must never be selected."""
+    x, c = _mk(64, 5, 16, seed=3)
+    idx, _ = ops.assign_clusters(x, c, impl="interpret")
+    assert int(np.asarray(idx).max()) < 5
+
+
+def test_objective_matches():
+    x, c = _mk(128, 6, 10)
+    o1 = float(ops.mssc_objective(x, c, impl="ref"))
+    o2 = float(ops.mssc_objective(x, c, impl="interpret"))
+    np.testing.assert_allclose(o1, o2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,k,d", [(64, 5, 16), (300, 17, 96), (256, 128, 256)])
+def test_fused_lloyd_pass_matches_two_kernel_path(s, k, d):
+    x, c = _mk(s, k, d, seed=7)
+    i1, d1 = ref.assign_ref(x, c)
+    s1, n1 = ref.cluster_sums_ref(x, i1, k)
+    i2, d2, s2, n2 = ops.lloyd_pass(x, c, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+
+
+def test_fused_lloyd_pass_ref_fallback():
+    x, c = _mk(100, 7, 33)
+    i, dd, ss, nn = ops.lloyd_pass(x, c, impl="ref")
+    i2, _ = ref.assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i2))

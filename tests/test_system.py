@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests for the paper's system (headline claims)."""
+import numpy as np
+
+from repro.core import HPClust, HPClustConfig
+from repro.core.baselines import forgy_kmeans, pbk_bdc
+from repro.core.hpclust import stream_from_generator
+from repro.data import blob_stream, gaussian_blobs
+
+
+def test_hpclust_solves_mssc_itd_stream():
+    """MSSC-ITD e2e: cluster an infinite stream window-by-window; quality on
+    held-out data from the same distribution approaches the blob optimum."""
+    cfg = HPClustConfig(k=10, sample_size=1024, workers=4, rounds=4,
+                        strategy="hybrid")
+    hp = HPClust(cfg, seed=0)
+    stream = stream_from_generator(blob_stream(16384, n=10, k=10, seed=7), 3)
+    res = hp.fit_stream(stream)
+    holdout = next(iter(blob_stream(50000, n=10, k=10, seed=7)))
+    obj = hp.objective(holdout, res.centroids)
+    base = forgy_kmeans(holdout, 10, seed=0)
+    assert obj <= base.objective * 1.10, (obj, base.objective)
+
+
+def test_paper_ordering_hpclust_vs_baselines(blobs):
+    """Paper Tables 5/6 qualitative ordering on well-separated blobs:
+    HPClust-hybrid <= {PBK-BDC, Forgy} in objective."""
+    cfg = HPClustConfig(k=5, sample_size=512, workers=4, rounds=8,
+                        strategy="hybrid")
+    hp = HPClust(cfg, seed=1)
+    res = hp.fit(blobs)
+    hp_obj = hp.objective(blobs, res.centroids)
+    fg = forgy_kmeans(blobs, 5, seed=1).objective
+    pb = pbk_bdc(blobs, 5, segment_size=1000, seed=1).objective
+    assert hp_obj <= fg * 1.05
+    assert hp_obj <= pb * 1.05
+
+
+def test_noise_robustness():
+    """Paper SS7.1: iterative small-sample processing is robust to noise."""
+    x, centers = gaussian_blobs(20000, n=10, k=10, noise_points=1000,
+                                sigma_max=2.0, seed=3)
+    cfg = HPClustConfig(k=10, sample_size=1024, workers=4, rounds=6,
+                        strategy="competitive")
+    hp = HPClust(cfg, seed=0)
+    res = hp.fit(x)
+    # every true center has a found centroid nearby (within 3 units)
+    d = np.sqrt(((centers[:, None, :] - res.centroids[None]) ** 2).sum(-1))
+    assert (d.min(axis=1) < 3.0).mean() >= 0.8
+
+
+def test_more_workers_do_not_hurt(blobs):
+    """Paper SS5.2: parallelism improves accuracy (monotone in expectation;
+    we assert no catastrophic regression on a fixed seed)."""
+    objs = {}
+    for w in (1, 4):
+        cfg = HPClustConfig(k=5, sample_size=384, workers=w, rounds=6,
+                            strategy="competitive")
+        hp = HPClust(cfg, seed=2)
+        res = hp.fit(blobs)
+        objs[w] = hp.objective(blobs, res.centroids)
+    assert objs[4] <= objs[1] * 1.2, objs
