@@ -1,0 +1,31 @@
+"""Static-analysis suite for the repro JAX/Pallas codebase.
+
+Three check families guard the invariants the paper's performance claims
+rest on (see docs/static_analysis.md):
+
+  PK*  Pallas kernel structure: grid/BlockSpec arity, (8, 128) tile
+       alignment, kernel ref arity, static VMEM budgets, out-spec counts.
+  JH*  jit hygiene: static_argnames/donate_argnums vs signature, jit
+       constructed per call, unhashable statics, host calls in traces.
+  DT*  dtype discipline: float64 leaks, MXU accumulation dtype.
+
+Programmatic API::
+
+    from repro.analysis import analyze_paths, analyze_source
+    findings = analyze_paths(["src"])        # list[Finding]
+
+CLI::
+
+    python -m repro.analysis src/ --baseline analysis-baseline.json
+"""
+from repro.analysis.core import (  # noqa: F401
+    Check,
+    Finding,
+    ModuleContext,
+    all_checks,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    register,
+    select_checks,
+)

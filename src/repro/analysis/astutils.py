@@ -1,0 +1,324 @@
+"""AST helpers shared by the static-analysis checks.
+
+The checks never execute repo code — every question ("what is this block
+shape?", "which function does this ``pl.pallas_call`` run?") is answered by
+constant-folding the AST against a small environment: module-level constant
+assignments, function keyword defaults, and simple straight-line local
+assignments. Anything unresolvable folds to ``None`` and the checks treat it
+as unknown rather than guessing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Any, Optional
+
+
+# ---------------------------------------------------------------------------
+# name resolution
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.experimental.pallas.pallas_call`` -> the dotted string, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def get_kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def has_kwarg(call: ast.Call, name: str) -> bool:
+    return get_kwarg(call, name) is not None
+
+
+# ---------------------------------------------------------------------------
+# constant folding
+# ---------------------------------------------------------------------------
+
+
+def module_const_env(tree: ast.Module) -> dict[str, Any]:
+    """Collect module-level ``NAME = <int/float/str literal>`` assignments."""
+    env: dict[str, Any] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                val = fold_const(node.value, {})
+                if val is not None:
+                    env[tgt.id] = val
+    return env
+
+
+def function_env(
+    fn: ast.FunctionDef, base: dict[str, Any]
+) -> dict[str, Any]:
+    """base env + keyword defaults + straight-line local constant assigns.
+
+    This resolves the idiomatic kernel-wrapper pattern::
+
+        def wrapper(x, *, block_s: int = 256):
+            bs = min(block_s, s)          # folds to <= 256
+
+    Locals are folded in source order, one forward pass — loops and branches
+    are not interpreted (their targets become unresolvable, which is the
+    conservative outcome).
+    """
+    env = dict(base)
+    args = fn.args
+    # positional defaults align to the tail of args.args
+    pos = list(args.posonlyargs) + list(args.args)
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        val = fold_const(d, env)
+        if val is not None:
+            env[a.arg] = val
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            val = fold_const(d, env)
+            if val is not None:
+                env[a.arg] = val
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if isinstance(tgt, ast.Name):
+            val = fold_const(node.value, env)
+            if val is not None:
+                env.setdefault(tgt.id, val)
+        elif (
+            # tuple unpacking of constants: bs, bk = 8, 128
+            isinstance(tgt, ast.Tuple)
+            and isinstance(node.value, ast.Tuple)
+            and len(tgt.elts) == len(node.value.elts)
+        ):
+            for t, v in zip(tgt.elts, node.value.elts):
+                if isinstance(t, ast.Name):
+                    val = fold_const(v, env)
+                    if val is not None:
+                        env.setdefault(t.id, val)
+    return env
+
+
+def fold_const(node: ast.AST, env: dict[str, Any]) -> Optional[Any]:
+    """Best-effort constant fold of an expression to int/float/str.
+
+    ``min``/``max`` calls fold over their *resolvable* arguments — for block
+    shapes this yields a sound upper bound, because ``min(block, dim)`` can
+    only shrink below the resolvable operand.
+    """
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (int, float, str)) and not isinstance(
+            node.value, bool
+        ):
+            return node.value
+        return None
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = fold_const(node.operand, env)
+        return -v if isinstance(v, (int, float)) else None
+    if isinstance(node, ast.BinOp):
+        l = fold_const(node.left, env)
+        r = fold_const(node.right, env)
+        if isinstance(l, (int, float)) and isinstance(r, (int, float)):
+            try:
+                if isinstance(node.op, ast.Add):
+                    return l + r
+                if isinstance(node.op, ast.Sub):
+                    return l - r
+                if isinstance(node.op, ast.Mult):
+                    return l * r
+                if isinstance(node.op, ast.FloorDiv):
+                    return l // r
+                if isinstance(node.op, ast.Mod):
+                    return l % r
+                if isinstance(node.op, ast.Pow):
+                    return l ** r
+                if isinstance(node.op, ast.LShift):
+                    return l << r
+            except (ZeroDivisionError, TypeError, ValueError):
+                return None
+        return None
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in ("min", "max") and not node.keywords:
+            vals = [fold_const(a, env) for a in node.args]
+            nums = [v for v in vals if isinstance(v, (int, float))]
+            if not nums:
+                return None
+            if name == "min":
+                # sound upper bound even when some args are unknown
+                return min(nums)
+            # max over partial args is NOT an upper bound: only fold when
+            # every argument resolved
+            if len(nums) == len(vals):
+                return max(nums)
+        return None
+    return None
+
+
+def fold_shape(
+    node: Optional[ast.AST], env: dict[str, Any]
+) -> Optional[tuple[Optional[int], ...]]:
+    """Fold a shape tuple/list; unresolvable dims become None."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    dims = []
+    for e in node.elts:
+        v = fold_const(e, env)
+        dims.append(v if isinstance(v, int) else None)
+    return tuple(dims)
+
+
+# dtype attribute suffix -> itemsize in bytes
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def dtype_bytes(node: Optional[ast.AST], default: int = 4) -> int:
+    """Itemsize of a dtype expression like ``jnp.float32`` (default f32)."""
+    if node is None:
+        return default
+    name = dotted_name(node)
+    if name is None and isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    if name is None:
+        return default
+    return _DTYPE_BYTES.get(name.rsplit(".", 1)[-1], default)
+
+
+def dtype_name(node: Optional[ast.AST]) -> Optional[str]:
+    if node is None:
+        return None
+    name = dotted_name(node)
+    if name is None and isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+# ---------------------------------------------------------------------------
+# structural helpers
+# ---------------------------------------------------------------------------
+
+
+def function_defs(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """All function defs in the module, including methods (qualified access
+    is by bare name — collisions keep the first definition)."""
+    out: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def positional_params(fn: ast.FunctionDef) -> list[str]:
+    return [a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)]
+
+
+def all_params(fn: ast.FunctionDef) -> list[str]:
+    names = positional_params(fn)
+    names += [a.arg for a in fn.args.kwonlyargs]
+    if fn.args.vararg:
+        names.append(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.append(fn.args.kwarg.arg)
+    return names
+
+
+def param_default(fn: ast.FunctionDef, name: str) -> Optional[ast.expr]:
+    """Default-value expression of parameter ``name``, if any."""
+    pos = list(fn.args.posonlyargs) + list(fn.args.args)
+    off = len(pos) - len(fn.args.defaults)
+    for i, a in enumerate(pos):
+        if a.arg == name and i >= off:
+            return fn.args.defaults[i - off]
+    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if a.arg == name and d is not None:
+            return d
+    return None
+
+
+def lambda_arity(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def resolve_callable(
+    node: ast.AST, defs: dict[str, ast.FunctionDef]
+) -> tuple[Optional[ast.FunctionDef], list[str]]:
+    """Resolve a callable expression to a module FunctionDef.
+
+    Handles ``kernel_fn``, ``functools.partial(kernel_fn, a=1)``, and nested
+    partials. Returns (def-or-None, keyword names bound by partials).
+    """
+    bound: list[str] = []
+    while isinstance(node, ast.Call) and call_name(node) in (
+        "functools.partial", "partial",
+    ):
+        bound += [kw.arg for kw in node.keywords if kw.arg]
+        if not node.args:
+            return None, bound
+        node = node.args[0]
+    if isinstance(node, ast.Name):
+        return defs.get(node.id), bound
+    name = dotted_name(node)
+    if name and "." in name:
+        return defs.get(name.rsplit(".", 1)[-1]), bound
+    return None, bound
+
+
+def elements(node: Optional[ast.AST]) -> Optional[list[ast.expr]]:
+    """Elements of a list/tuple literal, else None (single value -> [value])."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]  # single spec / shape allowed by pallas_call
+
+
+def parent_map(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing_function(
+    node: ast.AST, parents: dict[ast.AST, ast.AST]
+) -> Optional[ast.FunctionDef]:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def decorator_nodes(tree: ast.AST) -> set[ast.AST]:
+    """Every AST node that lives inside some decorator expression."""
+    out: set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            for dec in node.decorator_list:
+                out.update(ast.walk(dec))
+    return out

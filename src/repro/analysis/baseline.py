@@ -1,0 +1,51 @@
+"""Baseline files: grandfather existing findings so CI gates only on NEW ones.
+
+The baseline is a JSON document of finding *fingerprints*
+(``path::CODE::stripped-source-line``) — line numbers are deliberately
+excluded so unrelated edits that shift a file do not resurrect grandfathered
+findings. Fixing the flagged line (or moving the file) invalidates the
+fingerprint, at which point the entry is stale and ``--write-baseline``
+prunes it.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable
+
+from repro.analysis.core import Finding
+
+BASELINE_VERSION = 1
+
+
+def load(path: str) -> set[str]:
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if isinstance(doc, list):  # bare fingerprint list is accepted
+        return set(doc)
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"unsupported baseline version {doc.get('version')!r} in {path}"
+        )
+    return set(doc["fingerprints"])
+
+
+def write(path: str, findings: Iterable[Finding]) -> int:
+    fps = sorted({f.fingerprint for f in findings})
+    doc = {"version": BASELINE_VERSION, "fingerprints": fps}
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return len(fps)
+
+
+def split(
+    findings: Iterable[Finding], baseline: set[str]
+) -> tuple[list[Finding], list[Finding]]:
+    """Partition into (new, grandfathered)."""
+    new, old = [], []
+    for f in findings:
+        (old if f.fingerprint in baseline else new).append(f)
+    return new, old

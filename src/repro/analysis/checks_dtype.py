@@ -1,0 +1,112 @@
+"""DT: dtype discipline — f32 end to end, explicit MXU accumulation.
+
+JAX defaults to f32 (x64 disabled), so a float64 request is at best a silent
+downcast and at worst — with x64 enabled for debugging — a 2x memory/compute
+regression in the hot loop. Inside Pallas kernel bodies the MXU contracts
+additionally need an explicit ``preferred_element_type``: without it a bf16
+matmul accumulates in bf16 and the online argmin carry loses ties.
+
+Codes:
+  DT001  float64 dtype reference (attribute or string literal)
+  DT002  dot_general/matmul in a kernel body without preferred_element_type
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutils as au
+from repro.analysis.core import ModuleContext, register
+from repro.analysis.checks_pallas import kernel_def_for, pallas_call_sites
+
+_F64_ATTRS = ("jnp.float64", "np.float64", "numpy.float64", "jax.numpy.float64")
+_CONTRACTIONS = (
+    "jax.lax.dot_general", "lax.dot_general", "dot_general",
+    "jnp.dot", "jnp.matmul", "jnp.einsum",
+    "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum",
+)
+
+
+@register(
+    "DT001",
+    "float64-leak",
+    "float64 dtypes silently downcast to f32 under JAX defaults and double "
+    "memory traffic when x64 is enabled — keep the pipeline f32/bf16.",
+)
+def check_float64(ctx: ModuleContext):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute):
+            name = au.dotted_name(node)
+            if name in _F64_ATTRS:
+                yield ctx.finding(
+                    "DT001", node,
+                    f"`{name}` referenced — float64 is a silent f32 downcast "
+                    f"under default JAX config and a 2x regression under x64",
+                )
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if (
+                    kw.arg == "dtype"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value == "float64"
+                ):
+                    yield ctx.finding(
+                        "DT001", kw.value,
+                        "dtype='float64' requested — keep the pipeline "
+                        "f32/bf16",
+                    )
+            name = au.call_name(node)
+            if (
+                name is not None
+                and name.endswith(".astype")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == "float64"
+            ):
+                yield ctx.finding(
+                    "DT001", node.args[0],
+                    ".astype('float64') requested — keep the pipeline "
+                    "f32/bf16",
+                )
+
+
+def _kernel_bodies(ctx: ModuleContext):
+    """Pallas kernel bodies: resolved pallas_call targets, plus the
+    ``*_ref``-parameter naming convention as a fallback so kernels are
+    checked even when their pallas_call lives in another module."""
+    seen = set()
+    for site in pallas_call_sites(ctx):
+        kdef, _ = kernel_def_for(site, ctx)
+        if kdef is not None and kdef not in seen:
+            seen.add(kdef)
+            yield kdef
+    for fdef in ctx.defs.values():
+        if fdef in seen:
+            continue
+        pos = au.positional_params(fdef)
+        if len(pos) >= 2 and all(p.endswith("_ref") for p in pos):
+            seen.add(fdef)
+            yield fdef
+
+
+@register(
+    "DT002",
+    "mxu-accumulation-dtype",
+    "MXU contractions in kernel bodies must pin preferred_element_type "
+    "(f32 accumulation) or low-precision inputs accumulate in low precision.",
+)
+def check_preferred_element_type(ctx: ModuleContext):
+    for kdef in _kernel_bodies(ctx):
+        for node in ast.walk(kdef):
+            if not isinstance(node, ast.Call):
+                continue
+            name = au.call_name(node)
+            if name not in _CONTRACTIONS:
+                continue
+            if not au.has_kwarg(node, "preferred_element_type"):
+                yield ctx.finding(
+                    "DT002",
+                    node,
+                    f"`{name}` in kernel `{kdef.name}` has no "
+                    f"preferred_element_type — pass jnp.float32 so the MXU "
+                    f"accumulates in f32",
+                )

@@ -1,0 +1,236 @@
+"""JH: jax.jit hygiene — fast-path invariants for the strategy loops.
+
+The paper's speedups assume every hot entry point compiles once and then
+replays; all four hazards below silently re-trace or re-compile instead.
+
+Codes:
+  JH001  static_argnames entry not in the wrapped function's signature
+  JH002  donate_argnums index out of range of the positional parameters
+  JH003  jax.jit constructed inside a function/method body (a fresh jit
+         wrapper per call defeats the compile cache across calls/instances)
+  JH004  static parameter whose default is an unhashable literal
+  JH005  host-side numpy / Python-RNG call inside a jitted function body
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis import astutils as au
+from repro.analysis.core import ModuleContext, register
+
+_JIT_NAMES = ("jax.jit", "jit", "api.jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+# numpy attribute accesses that are legal inside a trace (dtypes, constants —
+# not data-producing calls).
+_NP_CALL_ALLOWED = {
+    "float32", "float64", "float16", "bfloat16",
+    "int8", "int16", "int32", "int64", "uint8", "uint32", "uint64",
+    "bool_", "dtype", "shape", "ndim",
+}
+_HOST_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.")
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and au.call_name(node) in _JIT_NAMES
+
+
+def _jit_targets(
+    ctx: ModuleContext,
+) -> Iterator[tuple[Optional[ast.Call], Optional[ast.FunctionDef]]]:
+    """All jit applications with the function they wrap (when resolvable).
+
+    Three idioms are recognized::
+
+        jax.jit(fn, static_argnames=...)            # call form
+        @functools.partial(jax.jit, static_...)     # partial-decorator form
+        @jax.jit                                    # bare decorator (call=None)
+    """
+    seen: set[ast.AST] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if _is_jit_call(dec):
+                yield dec, node
+                seen.add(dec)
+            elif au.dotted_name(dec) in _JIT_NAMES:
+                yield None, node
+            elif (
+                isinstance(dec, ast.Call)
+                and au.call_name(dec) in _PARTIAL_NAMES
+                and dec.args
+                and au.dotted_name(dec.args[0]) in _JIT_NAMES
+            ):
+                yield dec, node
+                seen.add(dec)
+    for node in ast.walk(ctx.tree):
+        if _is_jit_call(node) and node not in seen:
+            fdef = None
+            if node.args:
+                fdef, _ = au.resolve_callable(node.args[0], ctx.defs)
+            yield node, fdef
+
+
+def _static_argnames(call: ast.Call) -> tuple[Optional[ast.expr], list[str]]:
+    node = au.get_kwarg(call, "static_argnames")
+    if node is None:
+        return None, []
+    names: list[str] = []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        names = [node.value]
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.append(e.value)
+    return node, names
+
+
+@register(
+    "JH001",
+    "static-argnames-signature",
+    "Every static_argnames entry must name a parameter of the wrapped "
+    "function; unknown names raise only at first call (or never, under "
+    "**kwargs).",
+)
+def check_static_argnames(ctx: ModuleContext):
+    for call, fdef in _jit_targets(ctx):
+        if fdef is None or call is None:
+            continue
+        node, names = _static_argnames(call)
+        if node is None:
+            continue
+        params = set(au.all_params(fdef))
+        if fdef.args.kwarg is not None:
+            continue  # **kwargs swallows anything — cannot validate
+        for n in names:
+            if n not in params:
+                yield ctx.finding(
+                    "JH001",
+                    node,
+                    f"static_argnames entry {n!r} is not a parameter of "
+                    f"`{fdef.name}` ({', '.join(au.all_params(fdef)) or 'no params'})",
+                )
+
+
+@register(
+    "JH002",
+    "donate-argnums-range",
+    "donate_argnums indices must address positional parameters of the "
+    "wrapped function.",
+)
+def check_donate_argnums(ctx: ModuleContext):
+    for call, fdef in _jit_targets(ctx):
+        if fdef is None or call is None:
+            continue
+        node = au.get_kwarg(call, "donate_argnums")
+        if node is None:
+            continue
+        idxs: list[int] = []
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            idxs = [node.value]
+        elif isinstance(node, (ast.Tuple, ast.List)):
+            idxs = [
+                e.value
+                for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)
+            ]
+        if fdef.args.vararg is not None:
+            continue  # *args accepts any index
+        n_pos = len(au.positional_params(fdef))
+        for i in idxs:
+            if i < 0 or i >= n_pos:
+                yield ctx.finding(
+                    "JH002",
+                    node,
+                    f"donate_argnums index {i} is out of range for "
+                    f"`{fdef.name}` which has {n_pos} positional parameter(s)",
+                )
+
+
+@register(
+    "JH003",
+    "jit-in-function-body",
+    "jax.jit constructed inside a function/method body creates a fresh "
+    "compile cache per call — hoist it to module level or cache it.",
+)
+def check_jit_in_body(ctx: ModuleContext):
+    for node in ast.walk(ctx.tree):
+        if not _is_jit_call(node) or node in ctx.decorator_nodes:
+            continue
+        fn = au.enclosing_function(node, ctx.parents)
+        if fn is None:
+            continue
+        yield ctx.finding(
+            "JH003",
+            node,
+            f"jax.jit is constructed inside `{fn.name}` — every call "
+            f"re-wraps and re-traces; hoist the jitted callable to module "
+            f"level (or functools.lru_cache it) so the compile cache is "
+            f"shared across calls",
+        )
+
+
+@register(
+    "JH004",
+    "unhashable-static-default",
+    "Parameters marked static must be hashable; list/dict/set defaults "
+    "raise at trace time.",
+)
+def check_unhashable_static(ctx: ModuleContext):
+    for call, fdef in _jit_targets(ctx):
+        if fdef is None or call is None:
+            continue
+        _, names = _static_argnames(call)
+        for n in names:
+            default = au.param_default(fdef, n)
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                kind = type(default).__name__.lower()
+                yield ctx.finding(
+                    "JH004",
+                    default,
+                    f"static parameter {n!r} of `{fdef.name}` defaults to an "
+                    f"unhashable {kind} literal — jit hashes static args, so "
+                    f"the default value raises TypeError; use a tuple or "
+                    f"frozen container",
+                )
+
+
+@register(
+    "JH005",
+    "host-call-in-jit",
+    "numpy / Python-RNG calls inside a jitted body run at trace time on the "
+    "host — they bake constants into the graph or crash on tracers.",
+)
+def check_host_calls(ctx: ModuleContext):
+    jitted: dict[ast.FunctionDef, bool] = {}
+    for _, fdef in _jit_targets(ctx):
+        if fdef is not None:
+            jitted[fdef] = True
+    for fdef in jitted:
+        for node in ast.walk(fdef):
+            if not isinstance(node, ast.Call):
+                continue
+            name = au.call_name(node)
+            if name is None:
+                continue
+            if any(name.startswith(p) for p in _HOST_RNG_PREFIXES):
+                yield ctx.finding(
+                    "JH005",
+                    node,
+                    f"`{name}` inside jitted `{fdef.name}` draws host "
+                    f"randomness at trace time — the value freezes into the "
+                    f"compiled graph; use jax.random with an explicit key",
+                )
+            elif name.startswith(("np.", "numpy.")):
+                attr = name.split(".", 1)[1]
+                if attr.split(".")[0] in _NP_CALL_ALLOWED:
+                    continue
+                yield ctx.finding(
+                    "JH005",
+                    node,
+                    f"host-side `{name}` inside jitted `{fdef.name}` — numpy "
+                    f"executes at trace time and fails on tracers; use "
+                    f"jax.numpy",
+                )

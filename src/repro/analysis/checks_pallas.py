@@ -1,0 +1,267 @@
+"""PK: Pallas kernel checks — pallas_call structure and VMEM budgets.
+
+Every check walks the AST only; shapes are constant-folded against module
+constants and wrapper-function keyword defaults (``block_s: int = 256``), so
+``min(block_s, s)`` folds to a sound upper bound of 256 even though ``s`` is
+data-dependent. Dims that do not fold are treated as unknown and never
+flagged — the checks under-report rather than guess.
+
+Codes:
+  PK001  grid arity != BlockSpec index_map arity
+  PK002  block shape not (8, 128)-aligned (dims of 1 are exempt)
+  PK003  kernel positional-parameter count != in_specs+out_specs+scratch
+  PK004  static VMEM estimate (2x in/out blocks + scratch) exceeds budget
+  PK005  out_specs and out_shape lengths disagree
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional
+
+from repro.analysis import astutils as au
+from repro.analysis.core import Finding, ModuleContext, register
+
+# TPU VMEM is ~16 MiB/core; leave headroom for the compiler's own use.
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+SUBLANE, LANE = 8, 128
+
+_PALLAS_CALL_NAMES = ("pl.pallas_call", "pallas_call", "pltpu.pallas_call")
+_BLOCKSPEC_NAMES = ("pl.BlockSpec", "BlockSpec", "pltpu.PrefetchScalarGridSpec")
+_SCRATCH_VMEM = ("pltpu.VMEM", "VMEM")
+_SCRATCH_ANY = _SCRATCH_VMEM + ("pltpu.SMEM", "SMEM", "pltpu.SemaphoreType.DMA")
+
+
+@dataclasses.dataclass
+class PallasCallSite:
+    call: ast.Call
+    env: dict                      # folding environment at the call site
+    grid: Optional[list[ast.expr]]
+    in_specs: Optional[list[ast.expr]]
+    out_specs: Optional[list[ast.expr]]
+    out_shape: Optional[list[ast.expr]]
+    scratch_shapes: Optional[list[ast.expr]]
+
+
+def pallas_call_sites(ctx: ModuleContext) -> Iterator[PallasCallSite]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and au.call_name(node) in _PALLAS_CALL_NAMES):
+            continue
+        fn = au.enclosing_function(node, ctx.parents)
+        env = au.function_env(fn, ctx.const_env) if fn else dict(ctx.const_env)
+        grid = au.get_kwarg(node, "grid")
+        grid_elts = None
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            grid_elts = list(grid.elts)
+        elif grid is not None:
+            grid_elts = [grid]  # grid=n means a 1-d grid
+        yield PallasCallSite(
+            call=node,
+            env=env,
+            grid=grid_elts,
+            in_specs=au.elements(au.get_kwarg(node, "in_specs")),
+            out_specs=au.elements(au.get_kwarg(node, "out_specs")),
+            out_shape=au.elements(au.get_kwarg(node, "out_shape")),
+            scratch_shapes=au.elements(au.get_kwarg(node, "scratch_shapes")),
+        )
+
+
+def kernel_def_for(
+    site: PallasCallSite, ctx: ModuleContext
+) -> tuple[Optional[ast.FunctionDef], list[str]]:
+    """Resolve the kernel body this pallas_call runs (through partials)."""
+    if not site.call.args:
+        return None, []
+    return au.resolve_callable(site.call.args[0], ctx.defs)
+
+
+def _block_specs(site: PallasCallSite) -> Iterator[tuple[str, ast.Call]]:
+    for role, specs in (("in_specs", site.in_specs), ("out_specs", site.out_specs)):
+        for spec in specs or []:
+            if isinstance(spec, ast.Call) and au.call_name(spec) in _BLOCKSPEC_NAMES:
+                yield role, spec
+
+
+def _spec_shape_node(spec: ast.Call) -> Optional[ast.expr]:
+    if spec.args:
+        return spec.args[0]
+    return au.get_kwarg(spec, "block_shape")
+
+
+def _spec_index_map(spec: ast.Call) -> Optional[ast.expr]:
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return au.get_kwarg(spec, "index_map")
+
+
+@register(
+    "PK001",
+    "grid-index-map-arity",
+    "Every BlockSpec index_map must take exactly one argument per grid axis.",
+)
+def check_grid_arity(ctx: ModuleContext):
+    for site in pallas_call_sites(ctx):
+        if site.grid is None:
+            continue
+        n_grid = len(site.grid)
+        for role, spec in _block_specs(site):
+            imap = _spec_index_map(spec)
+            arity = au.lambda_arity(imap) if imap is not None else None
+            if arity is not None and arity != n_grid:
+                yield ctx.finding(
+                    "PK001",
+                    spec,
+                    f"{role} BlockSpec index_map takes {arity} arg(s) but the "
+                    f"grid has {n_grid} axis/axes — Pallas passes one program "
+                    f"id per grid axis",
+                )
+
+
+@register(
+    "PK002",
+    "tile-alignment",
+    "Block shapes must be multiples of (8, 128) on the last two axes "
+    "(dims of exactly 1 are exempt).",
+)
+def check_tile_alignment(ctx: ModuleContext):
+    for site in pallas_call_sites(ctx):
+        for role, spec in _block_specs(site):
+            shape_node = _spec_shape_node(spec)
+            shape = au.fold_shape(shape_node, site.env)
+            if not shape:
+                continue
+            checks = []
+            if len(shape) >= 2:
+                checks = [(shape[-2], SUBLANE, "second-to-last"),
+                          (shape[-1], LANE, "last")]
+            elif len(shape) == 1:
+                checks = [(shape[-1], LANE, "last")]
+            for dim, mult, which in checks:
+                if dim is not None and dim > 1 and dim % mult != 0:
+                    yield ctx.finding(
+                        "PK002",
+                        shape_node or spec,
+                        f"{role} block shape {shape} has {which} dim {dim}, "
+                        f"not a multiple of {mult} — the tile will be "
+                        f"silently padded or rejected by Mosaic",
+                    )
+
+
+@register(
+    "PK003",
+    "kernel-ref-arity",
+    "The kernel body must take one positional ref per input, output and "
+    "scratch buffer, in that order.",
+)
+def check_kernel_arity(ctx: ModuleContext):
+    for site in pallas_call_sites(ctx):
+        kdef, bound = kernel_def_for(site, ctx)
+        if kdef is None or site.in_specs is None:
+            continue
+        n_out = None
+        if site.out_specs is not None:
+            n_out = len(site.out_specs)
+        elif site.out_shape is not None:
+            n_out = len(site.out_shape)
+        if n_out is None:
+            continue
+        n_scratch = len(site.scratch_shapes or [])
+        expected = len(site.in_specs) + n_out + n_scratch
+        pos = au.positional_params(kdef)
+        # partial() may bind positional params by keyword
+        got = len([p for p in pos if p not in bound])
+        if got != expected:
+            yield ctx.finding(
+                "PK003",
+                site.call,
+                f"kernel `{kdef.name}` takes {got} positional ref(s) but "
+                f"pallas_call supplies {expected} "
+                f"({len(site.in_specs)} in + {n_out} out + {n_scratch} scratch)",
+            )
+
+
+@register(
+    "PK004",
+    "vmem-budget",
+    "Static VMEM estimate (2x double-buffered in/out blocks + scratch) must "
+    "stay under the ~16 MiB/core budget.",
+)
+def check_vmem_budget(ctx: ModuleContext):
+    for site in pallas_call_sites(ctx):
+        total = 0
+        parts = []
+        # out_shape dtypes line up with out_specs by position
+        out_dtypes: list[Optional[ast.expr]] = []
+        for sd in site.out_shape or []:
+            if isinstance(sd, ast.Call):
+                out_dtypes.append(
+                    sd.args[1] if len(sd.args) >= 2 else au.get_kwarg(sd, "dtype")
+                )
+            else:
+                out_dtypes.append(None)
+        for role, specs in (("in", site.in_specs), ("out", site.out_specs)):
+            for i, spec in enumerate(specs or []):
+                if not (
+                    isinstance(spec, ast.Call)
+                    and au.call_name(spec) in _BLOCKSPEC_NAMES
+                ):
+                    continue
+                shape = au.fold_shape(_spec_shape_node(spec), site.env)
+                if not shape or any(d is None for d in shape):
+                    continue  # unknown dim: cannot bound this buffer
+                itemsize = 4
+                if role == "out" and i < len(out_dtypes):
+                    itemsize = au.dtype_bytes(out_dtypes[i])
+                nbytes = _prod(shape) * itemsize * 2  # 2x: pipeline buffers
+                total += nbytes
+                parts.append(f"{role}{i}:{_fmt_mib(nbytes)}")
+        for i, sc in enumerate(site.scratch_shapes or []):
+            if not (isinstance(sc, ast.Call) and au.call_name(sc) in _SCRATCH_VMEM):
+                continue
+            shape = au.fold_shape(
+                sc.args[0] if sc.args else au.get_kwarg(sc, "shape"), site.env
+            )
+            if not shape or any(d is None for d in shape):
+                continue
+            dt = sc.args[1] if len(sc.args) >= 2 else au.get_kwarg(sc, "dtype")
+            nbytes = _prod(shape) * au.dtype_bytes(dt)
+            total += nbytes
+            parts.append(f"scratch{i}:{_fmt_mib(nbytes)}")
+        if total > VMEM_LIMIT_BYTES:
+            yield ctx.finding(
+                "PK004",
+                site.call,
+                f"estimated VMEM footprint {_fmt_mib(total)} exceeds the "
+                f"{_fmt_mib(VMEM_LIMIT_BYTES)} budget "
+                f"({', '.join(parts)}) — shrink block sizes or spill "
+                f"accumulators",
+            )
+
+
+@register(
+    "PK005",
+    "out-spec-shape-count",
+    "out_specs and out_shape must describe the same number of outputs.",
+)
+def check_out_counts(ctx: ModuleContext):
+    for site in pallas_call_sites(ctx):
+        if site.out_specs is None or site.out_shape is None:
+            continue
+        if len(site.out_specs) != len(site.out_shape):
+            yield ctx.finding(
+                "PK005",
+                site.call,
+                f"pallas_call declares {len(site.out_specs)} out_specs but "
+                f"{len(site.out_shape)} out_shape entries",
+            )
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _fmt_mib(nbytes: int) -> str:
+    return f"{nbytes / (1024 * 1024):.2f}MiB"

@@ -1,0 +1,115 @@
+"""``python -m repro.analysis`` — run the static-analysis suite.
+
+Exit codes: 0 clean (modulo baseline), 1 new findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import core
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis for the repro JAX/Pallas codebase: "
+        "Pallas kernel invariants (PK), jit hygiene (JH), dtype "
+        "discipline (DT).",
+    )
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to analyze (default: src)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit findings as JSON on stdout")
+    p.add_argument("--baseline", metavar="FILE",
+                   help="baseline file; findings fingerprinted there are "
+                   "reported as grandfathered and do not fail the run")
+    p.add_argument("--write-baseline", metavar="FILE",
+                   help="write all current findings to FILE and exit 0")
+    p.add_argument("--select", metavar="CODES",
+                   help="comma-separated codes or prefixes, e.g. PK002,JH")
+    p.add_argument("--vmem-limit-mib", type=int, default=None, metavar="N",
+                   help="override the PK004 VMEM budget (default 16)")
+    p.add_argument("--list-checks", action="store_true",
+                   help="list registered checks and exit")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress grandfathered findings in human output")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_checks:
+        for c in core.all_checks():
+            print(f"{c.code}  {c.name}\n    {c.description}")
+        return 0
+
+    if args.vmem_limit_mib is not None:
+        from repro.analysis import checks_pallas
+
+        checks_pallas.VMEM_LIMIT_BYTES = args.vmem_limit_mib * 1024 * 1024
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        print(f"error: no such path(s): {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    select = args.select.split(",") if args.select else None
+    try:
+        findings = core.analyze_paths(args.paths, select=select)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    except OSError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        n = baseline_mod.write(args.write_baseline, findings)
+        print(f"wrote {n} fingerprint(s) to {args.write_baseline}")
+        return 0
+
+    base: set[str] = set()
+    if args.baseline:
+        try:
+            base = baseline_mod.load(args.baseline)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"error: cannot load baseline: {e}", file=sys.stderr)
+            return 2
+    new, old = baseline_mod.split(findings, base)
+    stale = base - {f.fingerprint for f in findings}
+
+    if args.as_json:
+        json.dump(
+            {
+                "new": [f.to_json() for f in new],
+                "grandfathered": [f.to_json() for f in old],
+                "stale_baseline_entries": sorted(stale),
+                "summary": {"new": len(new), "grandfathered": len(old),
+                            "stale": len(stale)},
+            },
+            sys.stdout, indent=2,
+        )
+        print()
+        return 1 if new else 0
+
+    for f in new:
+        print(f"{f.path}:{f.line}:{f.col + 1}: {f.code} {f.message}")
+    if old and not args.quiet:
+        for f in old:
+            print(
+                f"{f.path}:{f.line}:{f.col + 1}: {f.code} [baseline] "
+                f"{f.message}"
+            )
+    if stale and not args.quiet:
+        print(f"note: {len(stale)} stale baseline entr(y/ies) — "
+              f"refresh with --write-baseline")
+    print(
+        f"{len(new)} new finding(s), {len(old)} grandfathered"
+        + (f", {len(stale)} stale baseline" if stale else "")
+    )
+    return 1 if new else 0

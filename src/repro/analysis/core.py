@@ -1,0 +1,215 @@
+"""Check registry, finding model, and the per-module analysis driver.
+
+A *check* is a function ``(ModuleContext) -> Iterable[Finding]`` registered
+under a stable code (``PK001``, ``JH003``, ...). The driver parses each file
+once, builds shared context (const env, function table, parent links), and
+feeds it to every selected check. Checks are pure AST consumers — no repo
+code is imported or executed, so the analyzer is safe to run on broken or
+TPU-only modules from any host.
+
+Future PRs extend the suite by registering new checks (sharding-spec
+validators, collective-ordering lints) — see docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+import os
+from typing import Callable, Iterable, Iterator, Optional
+
+from repro.analysis import astutils
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str          # e.g. "PK002"
+    message: str       # human explanation with the offending values inlined
+    path: str          # path as given to the analyzer (normalized, relative)
+    line: int          # 1-based
+    col: int           # 0-based
+    snippet: str       # stripped source line — part of the fingerprint
+    severity: str = "error"
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline, so findings stay
+        grandfathered when unrelated edits shift the file."""
+        return f"{self.path}::{self.code}::{self.snippet}"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a check needs about one parsed module."""
+
+    path: str
+    source: str
+    tree: ast.Module
+    lines: list[str]
+
+    @functools.cached_property
+    def const_env(self) -> dict:
+        return astutils.module_const_env(self.tree)
+
+    @functools.cached_property
+    def defs(self) -> dict[str, ast.FunctionDef]:
+        return astutils.function_defs(self.tree)
+
+    @functools.cached_property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        return astutils.parent_map(self.tree)
+
+    @functools.cached_property
+    def decorator_nodes(self) -> set[ast.AST]:
+        return astutils.decorator_nodes(self.tree)
+
+    def snippet_at(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(
+        self, code: str, node: ast.AST, message: str, severity: str = "error"
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            code=code,
+            message=message,
+            path=self.path,
+            line=line,
+            col=col,
+            snippet=self.snippet_at(line),
+            severity=severity,
+        )
+
+
+CheckFn = Callable[[ModuleContext], Iterable[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    code: str
+    name: str
+    description: str
+    fn: CheckFn
+
+
+_REGISTRY: dict[str, Check] = {}
+
+
+def register(code: str, name: str, description: str):
+    """Decorator: add a check to the global registry under ``code``."""
+
+    def deco(fn: CheckFn) -> CheckFn:
+        if code in _REGISTRY:
+            raise ValueError(f"duplicate check code {code}")
+        _REGISTRY[code] = Check(code=code, name=name, description=description, fn=fn)
+        return fn
+
+    return deco
+
+
+def all_checks() -> list[Check]:
+    _load_builtin_checks()
+    return [_REGISTRY[c] for c in sorted(_REGISTRY)]
+
+
+def _load_builtin_checks() -> None:
+    # Import for registration side effects; idempotent via sys.modules.
+    from repro.analysis import checks_dtype, checks_jit, checks_pallas  # noqa: F401
+
+
+def select_checks(select: Optional[Iterable[str]] = None) -> list[Check]:
+    """Filter registry by exact codes or prefixes ("PK" -> all PK checks)."""
+    checks = all_checks()
+    if not select:
+        return checks
+    sel = list(select)
+    picked = [
+        c for c in checks if any(c.code == s or c.code.startswith(s) for s in sel)
+    ]
+    unknown = [
+        s for s in sel if not any(c.code == s or c.code.startswith(s) for c in checks)
+    ]
+    if unknown:
+        raise KeyError(f"unknown check selector(s): {', '.join(unknown)}")
+    return picked
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[str]:
+    """Expand files/dirs to .py files, skipping caches and hidden dirs."""
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs if not d.startswith(".") and d != "__pycache__"
+            )
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def analyze_file(
+    path: str, checks: Optional[list[Check]] = None
+) -> list[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    # Canonicalize to a cwd-relative path when possible so baseline
+    # fingerprints agree between `src/`, `./src`, and absolute invocations.
+    norm = os.path.normpath(path)
+    rel = os.path.relpath(norm)
+    if not rel.startswith(".."):
+        norm = rel
+    return analyze_source(source, path=norm, checks=checks)
+
+
+def analyze_source(
+    source: str, *, path: str = "<string>", checks: Optional[list[Check]] = None
+) -> list[Finding]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [
+            Finding(
+                code="XX000",
+                message=f"syntax error: {e.msg}",
+                path=path,
+                line=e.lineno or 1,
+                col=(e.offset or 1) - 1,
+                snippet="",
+            )
+        ]
+    ctx = ModuleContext(
+        path=path, source=source, tree=tree, lines=source.splitlines()
+    )
+    out: list[Finding] = []
+    for check in checks if checks is not None else all_checks():
+        out.extend(check.fn(ctx))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return out
+
+
+def analyze_paths(
+    paths: Iterable[str], *, select: Optional[Iterable[str]] = None
+) -> list[Finding]:
+    checks = select_checks(select)
+    findings: list[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(analyze_file(f, checks=checks))
+    return findings

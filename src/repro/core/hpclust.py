@@ -41,9 +41,7 @@ class HPClust:
         """Cluster a (m, d) window (single-shot MSSC)."""
         key = jax.random.PRNGKey(self.seed)
         data = jnp.asarray(x, jnp.float32)
-        state, metrics = jax.jit(
-            strategies.run_hpclust, static_argnames=("cfg",)
-        )(key, data, cfg=self.config)
+        state, metrics = _jit_run_hpclust(key, data, cfg=self.config)
         c, obj = strategies.best_of(state)
         return HPClustResult(
             centroids=np.asarray(c),
@@ -71,13 +69,12 @@ class HPClust:
         key = jax.random.PRNGKey(self.seed)
         state: WorkerState | None = None
         hist = []
-        run = jax.jit(_run_from_state, static_argnames=("cfg",))
         for wi, window in enumerate(windows):
             data = jnp.asarray(window, jnp.float32)
             if state is None:
                 key, k0 = jax.random.split(key)
                 state = strategies.init_state(k0, run_cfg, data.shape[1])
-            state, metrics = run(state, data, cfg=run_cfg)
+            state, metrics = _jit_run_from_state(state, data, cfg=run_cfg)
             del wi
             hist.append(np.asarray(metrics.best_obj))
         if state is None:
@@ -95,28 +92,42 @@ class HPClust:
         *, batch: int = 1 << 16,
     ) -> np.ndarray:
         """Final full-dataset assignment (paper SS3 last step), batched."""
+        # ops.assign_clusters is already jitted at module level; calling it
+        # directly shares one compile cache across every estimator instance.
         c = jnp.asarray(centroids, jnp.float32)
-        fn = jax.jit(lambda xb: ops.assign_clusters(xb, c, impl=self.config.impl)[0])
         out = []
         x = np.asarray(x, np.float32)
         for i in range(0, len(x), batch):
-            out.append(np.asarray(fn(jnp.asarray(x[i : i + batch]))))
+            idx, _ = ops.assign_clusters(
+                jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
+            )
+            out.append(np.asarray(idx))
         return np.concatenate(out) if out else np.zeros((0,), np.int32)
 
     def objective(self, x, centroids, *, batch: int = 1 << 16) -> float:
         """f(C, X) over a full dataset, streamed in batches."""
         c = jnp.asarray(centroids, jnp.float32)
-        fn = jax.jit(lambda xb: ops.mssc_objective(xb, c, impl=self.config.impl))
         x = np.asarray(x, np.float32)
         total = 0.0
         for i in range(0, len(x), batch):
-            total += float(fn(jnp.asarray(x[i : i + batch])))
+            total += float(
+                ops.mssc_objective(
+                    jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
+                )
+            )
         return total
 
 
 def _run_from_state(state: WorkerState, data: Array, *, cfg: HPClustConfig):
     """run_rounds, jit-friendly keyword-static wrapper."""
     return strategies.run_rounds(state, data, cfg)
+
+
+# Jitted once at import: a fresh jax.jit wrapper per fit()/fit_stream() call
+# would key the compile cache on the wrapper identity and re-trace for every
+# estimator instance (analysis check JH003).
+_jit_run_hpclust = jax.jit(strategies.run_hpclust, static_argnames=("cfg",))
+_jit_run_from_state = jax.jit(_run_from_state, static_argnames=("cfg",))
 
 
 def stream_from_generator(

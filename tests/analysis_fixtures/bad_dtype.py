@@ -1,0 +1,23 @@
+"""Known-bad dtype usage for the DT check family.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+``# F:<CODE>`` tags mark the exact line each finding must anchor to.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def promote(x):
+    return x.astype(jnp.float64)  # F:DT001
+
+
+def make_buf(n):
+    return jnp.zeros((n,), dtype="float64")  # F:DT001
+
+
+def _bad_kernel(x_ref, c_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(  # F:DT002
+        x_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+    )

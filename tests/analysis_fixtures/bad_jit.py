@@ -1,0 +1,41 @@
+"""Known-bad jit usage for the JH check family.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+``# F:<CODE>`` tags mark the exact line each finding must anchor to.
+"""
+import functools
+
+import jax
+import numpy as np
+
+
+def scale(x, n):
+    return x * n
+
+
+_jit_wrong_name = jax.jit(scale, static_argnames=("m",))  # F:JH001
+
+
+def axpy(a, b):
+    return a + b
+
+
+_jit_bad_donate = jax.jit(axpy, donate_argnums=(5,))  # F:JH002
+
+
+class Runner:
+    def step(self, x):
+        fn = jax.jit(lambda y: y * 2)  # F:JH003
+        return fn(x)
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def with_unhashable(x, *, opts=[1, 2]):  # F:JH004
+    return x if opts else -x
+
+
+@jax.jit
+def leaky(x):
+    noise = np.random.normal(size=(4,))  # F:JH005
+    bias = np.asarray([1.0, 2.0, 3.0, 4.0])  # F:JH005
+    return x + noise + bias

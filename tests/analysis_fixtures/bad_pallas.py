@@ -1,0 +1,87 @@
+"""Known-bad pallas_call sites for the PK check family.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+``# F:<CODE>`` tags mark the exact line each finding must anchor to.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 2048
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _kernel3(x_ref, a_ref, b_ref):
+    a_ref[...] = x_ref[...]
+    b_ref[...] = x_ref[...]
+
+
+def bad_grid_arity(x):
+    """index_map takes 3 program ids but the grid has 2 axes."""
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i, j, k: (i, j)),  # F:PK001
+        ],
+        out_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((32, 512), jnp.float32)],
+    )(x)
+
+
+def bad_alignment(x):
+    """(100, 257) is aligned to neither sublanes nor lanes."""
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((100, 257), lambda i: (i, 0)),  # F:PK002
+        ],
+        out_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((32, 128), jnp.float32)],
+    )(x)
+
+
+def bad_kernel_arity(x):
+    """2 in + 1 out + 1 scratch = 4 refs, but `_kernel` only takes 2."""
+    return pl.pallas_call(  # F:PK003
+        _kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((32, 128), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+    )(x, x)
+
+
+def over_budget(x):
+    """2x(32 MiB in) + 2x(32 MiB out) + 4 MiB scratch >> 16 MiB VMEM."""
+    return pl.pallas_call(  # F:PK004
+        _kernel3,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((BIG, BIG), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BIG, BIG), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((4096, 2048), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1024, 1024), jnp.float32)],
+    )(x)
+
+
+def mismatched_outputs(x):
+    """Two out_specs but only one out_shape entry."""
+    return pl.pallas_call(  # F:PK005
+        _kernel3,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((8, 128), jnp.float32)],
+    )(x)

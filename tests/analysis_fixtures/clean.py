@@ -1,0 +1,58 @@
+"""A well-formed Pallas + jit module: every check must stay silent here.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 256
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, c_ref, o_ref, acc_ref, *, nd: int):
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(di == nd - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_k", "block_d"))
+def matmul(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    block_s: int = BLOCK_S,
+    block_k: int = BLOCK_K,
+    block_d: int = 256,
+) -> jax.Array:
+    s, d = x.shape
+    k = c.shape[0]
+    bs, bk, bd = min(block_s, s), min(block_k, k), min(block_d, d)
+    ns, nk, nd = s // bs, k // bk, d // bd
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nd=nd),
+        grid=(ns, nk, nd),
+        in_specs=[
+            pl.BlockSpec((bs, bd), lambda si, ki, di: (si, di)),
+            pl.BlockSpec((bk, bd), lambda si, ki, di: (ki, di)),
+        ],
+        out_specs=[pl.BlockSpec((bs, bk), lambda si, ki, di: (si, ki))],
+        out_shape=[jax.ShapeDtypeStruct((s, k), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bs, bk), jnp.float32)],
+    )(x.astype(jnp.float32), c.astype(jnp.float32))[0]

@@ -1,0 +1,135 @@
+"""Static-analysis suite: fixture true-positives, clean-fixture silence,
+CLI/baseline behavior, and the self-check that src/repro stays clean."""
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_checks, analyze_file, analyze_source, select_checks
+from repro.analysis import baseline as baseline_mod
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+TAG = re.compile(r"#\s*F:([A-Z]{2}\d{3})")
+
+
+def expected_findings(path: Path) -> set[tuple[str, int]]:
+    out = set()
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for m in TAG.finditer(line):
+            out.add((m.group(1), lineno))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixture-backed true positives / false positives
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name", ["bad_pallas.py", "bad_jit.py", "bad_dtype.py"]
+)
+def test_fixture_findings_exact(name):
+    """Each tagged line yields exactly its finding — code, file and line —
+    and nothing else fires anywhere in the fixture."""
+    path = FIXTURES / name
+    findings = analyze_file(str(path))
+    got = {(f.code, f.line) for f in findings}
+    assert got == expected_findings(path), [
+        f"{f.code}@{f.line}: {f.message}" for f in findings
+    ]
+    assert all(f.path.endswith(name) for f in findings)
+
+
+def test_fixture_covers_every_check():
+    """The three fixtures jointly exercise every registered check code."""
+    tagged = set()
+    for p in FIXTURES.glob("bad_*.py"):
+        tagged |= {code for code, _ in expected_findings(p)}
+    assert tagged == {c.code for c in all_checks()}
+
+
+def test_clean_fixture_has_no_findings():
+    findings = analyze_file(str(FIXTURES / "clean.py"))
+    assert findings == [], [f"{f.code}@{f.line}: {f.message}" for f in findings]
+
+
+def test_select_filters_by_prefix():
+    path = FIXTURES / "bad_pallas.py"
+    findings = analyze_source(
+        path.read_text(), path=str(path), checks=select_checks(["PK002"])
+    )
+    assert {f.code for f in findings} == {"PK002"}
+    with pytest.raises(KeyError):
+        select_checks(["ZZ"])
+
+
+def test_vmem_estimate_details_in_message():
+    findings = [
+        f
+        for f in analyze_file(str(FIXTURES / "bad_pallas.py"))
+        if f.code == "PK004"
+    ]
+    assert len(findings) == 1
+    assert "exceeds" in findings[0].message
+    assert "MiB" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_grandfathers_and_detects_new(tmp_path):
+    path = FIXTURES / "bad_jit.py"
+    findings = analyze_file(str(path))
+    assert findings
+    bl = tmp_path / "baseline.json"
+    baseline_mod.write(str(bl), findings)
+    new, old = baseline_mod.split(findings, baseline_mod.load(str(bl)))
+    assert new == [] and len(old) == len(findings)
+    # a finding not in the baseline stays "new"
+    partial = baseline_mod.load(str(bl)) - {findings[0].fingerprint}
+    new, _ = baseline_mod.split(findings, partial)
+    assert [f.fingerprint for f in new] == [findings[0].fingerprint]
+
+
+def test_fingerprint_survives_line_shift():
+    src = (FIXTURES / "bad_dtype.py").read_text()
+    a = analyze_source(src, path="x.py")
+    b = analyze_source("# a new comment line\n" + src, path="x.py")
+    assert {f.fingerprint for f in a} == {f.fingerprint for f in b}
+    assert {f.line for f in a} != {f.line for f in b}
+
+
+# ---------------------------------------------------------------------------
+# CLI + self-check: the repo's own sources stay clean modulo the baseline
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+
+
+def test_cli_src_clean_modulo_committed_baseline():
+    r = _run_cli("src", "--baseline", "analysis-baseline.json", "-q")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_fails_without_baseline_on_bad_fixture():
+    r = _run_cli(str(FIXTURES / "bad_pallas.py"), "--json")
+    assert r.returncode == 1
+    doc = json.loads(r.stdout)
+    assert doc["summary"]["new"] > 0
+    assert doc["summary"]["grandfathered"] == 0
+    codes = {f["code"] for f in doc["new"]}
+    assert "PK004" in codes

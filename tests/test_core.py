@@ -1,8 +1,12 @@
 """Core clustering invariants: Lloyd, K-means++, strategies, streams."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+try:  # property tests degrade to fixed-seed parametrize without hypothesis
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -97,9 +101,7 @@ def test_kmeanspp_handles_duplicate_points():
     assert np.isfinite(np.asarray(c)).all()
 
 
-@hypothesis.settings(deadline=None, max_examples=10)
-@hypothesis.given(k=st.integers(2, 8), seed=st.integers(0, 1000))
-def test_kmeanspp_spreads_better_than_uniform(k, seed):
+def _check_kmeanspp_spread(k, seed):
     """D^2 seeding potential should not be wildly worse than uniform's."""
     r = np.random.default_rng(seed)
     centers = r.uniform(-20, 20, (k, 4))
@@ -110,6 +112,20 @@ def test_kmeanspp_spreads_better_than_uniform(k, seed):
     pot_pp = float(ref.mssc_objective_ref(xj, cpp))
     pot_uni = float(ref.mssc_objective_ref(xj, uni))
     assert pot_pp <= pot_uni * 2.0 + 1e-3
+
+
+if hypothesis is not None:
+
+    @hypothesis.settings(deadline=None, max_examples=10)
+    @hypothesis.given(k=st.integers(2, 8), seed=st.integers(0, 1000))
+    def test_kmeanspp_spreads_better_than_uniform(k, seed):
+        _check_kmeanspp_spread(k, seed)
+
+else:
+
+    @pytest.mark.parametrize("k,seed", [(2, 0), (4, 77), (8, 1000)])
+    def test_kmeanspp_spreads_better_than_uniform(k, seed):
+        _check_kmeanspp_spread(k, seed)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,11 @@
 """Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
 swept over shapes and dtypes, plus hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
+try:  # property tests degrade to fixed-seed parametrize without hypothesis
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,12 +62,7 @@ def test_assign_bf16_inputs():
     assert agree > 0.99
 
 
-@hypothesis.settings(deadline=None, max_examples=25)
-@hypothesis.given(
-    s=st.integers(2, 64), k=st.integers(1, 17), d=st.integers(1, 48),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_assign_is_true_argmin(s, k, d, seed):
+def _check_assign_is_true_argmin(s, k, d, seed):
     """Property: returned index minimizes the exact distance, and the
     returned distance equals that minimum (within fp tolerance)."""
     r = np.random.default_rng(seed)
@@ -77,11 +76,7 @@ def test_assign_is_true_argmin(s, k, d, seed):
     np.testing.assert_allclose(chosen, best, rtol=1e-3, atol=1e-3)
 
 
-@hypothesis.settings(deadline=None, max_examples=25)
-@hypothesis.given(
-    s=st.integers(1, 80), k=st.integers(1, 9), seed=st.integers(0, 2**31 - 1),
-)
-def test_cluster_sums_partition_property(s, k, seed):
+def _check_cluster_sums_partition(s, k, seed):
     """Property: sums over clusters == total sum; counts sum to s."""
     r = np.random.default_rng(seed)
     x = r.normal(size=(s, 7)).astype(np.float32)
@@ -93,6 +88,39 @@ def test_cluster_sums_partition_property(s, k, seed):
         np.asarray(sums).sum(0), x.sum(0), rtol=1e-4, atol=1e-4
     )
     assert np.asarray(counts).sum() == s
+
+
+if hypothesis is not None:
+
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(
+        s=st.integers(2, 64), k=st.integers(1, 17), d=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_assign_is_true_argmin(s, k, d, seed):
+        _check_assign_is_true_argmin(s, k, d, seed)
+
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(
+        s=st.integers(1, 80), k=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_cluster_sums_partition_property(s, k, seed):
+        _check_cluster_sums_partition(s, k, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "s,k,d,seed", [(2, 1, 1, 0), (33, 17, 48, 5), (64, 9, 7, 1234)]
+    )
+    def test_assign_is_true_argmin(s, k, d, seed):
+        _check_assign_is_true_argmin(s, k, d, seed)
+
+    @pytest.mark.parametrize(
+        "s,k,seed", [(1, 1, 0), (80, 9, 42), (17, 3, 999)]
+    )
+    def test_cluster_sums_partition_property(s, k, seed):
+        _check_cluster_sums_partition(s, k, seed)
 
 
 def test_assign_padding_never_wins():
