@@ -21,6 +21,11 @@ from repro.analysis.core import ModuleContext, register
 
 _JIT_NAMES = ("jax.jit", "jit", "api.jit")
 _PARTIAL_NAMES = ("functools.partial", "partial")
+# Memoized factories are the sanctioned alternative JH003's message points
+# at: the jit is constructed once per distinct key, not once per call.
+_CACHE_DECORATORS = (
+    "functools.lru_cache", "lru_cache", "functools.cache", "cache",
+)
 
 # numpy attribute accesses that are legal inside a trace (dtypes, constants —
 # not data-producing calls).
@@ -34,6 +39,18 @@ _HOST_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.")
 
 def _is_jit_call(node: ast.AST) -> bool:
     return isinstance(node, ast.Call) and au.call_name(node) in _JIT_NAMES
+
+
+def _is_cached_factory(fn: ast.FunctionDef) -> bool:
+    """True when ``fn`` is decorated with lru_cache/cache (any idiom:
+    ``@lru_cache``, ``@functools.lru_cache(maxsize=None)``)."""
+    for dec in fn.decorator_list:
+        name = au.dotted_name(dec)
+        if name is None and isinstance(dec, ast.Call):
+            name = au.call_name(dec)
+        if name in _CACHE_DECORATORS:
+            return True
+    return False
 
 
 def _jit_targets(
@@ -161,6 +178,17 @@ def check_jit_in_body(ctx: ModuleContext):
             continue
         fn = au.enclosing_function(node, ctx.parents)
         if fn is None:
+            continue
+        # Exempt memoized factories (the fix this check recommends): a jit
+        # built inside an lru_cache'd function — at any nesting depth — is
+        # constructed once per cache key.
+        enclosing, cached = fn, False
+        while enclosing is not None:
+            if _is_cached_factory(enclosing):
+                cached = True
+                break
+            enclosing = au.enclosing_function(enclosing, ctx.parents)
+        if cached:
             continue
         yield ctx.finding(
             "JH003",

@@ -16,11 +16,29 @@ import ast
 import dataclasses
 import functools
 import os
+import re
 from typing import Callable, Iterable, Iterator, Optional
 
 from repro.analysis import astutils
 
 SEVERITIES = ("error", "warning")
+
+# Inline suppression: ``# analysis: allow JH003`` (or a comma-separated code
+# list) on the finding's anchor line or the line directly above it. Trailing
+# free text after the codes is the (encouraged) justification.
+_PRAGMA_RE = re.compile(
+    r"#\s*analysis:\s*allow\s+([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+)
+
+
+def pragma_allows(lines: list[str]) -> dict[int, frozenset[str]]:
+    """Map 1-based line number -> codes allowed by a pragma on that line."""
+    out: dict[int, frozenset[str]] = {}
+    for i, ln in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(ln)
+        if m:
+            out[i] = frozenset(c.strip() for c in m.group(1).split(","))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +219,13 @@ def analyze_source(
     out: list[Finding] = []
     for check in checks if checks is not None else all_checks():
         out.extend(check.fn(ctx))
+    allows = pragma_allows(ctx.lines)
+    if allows:
+        out = [
+            f for f in out
+            if f.code not in allows.get(f.line, ())
+            and f.code not in allows.get(f.line - 1, ())
+        ]
     out.sort(key=lambda f: (f.path, f.line, f.col, f.code))
     return out
 

@@ -48,11 +48,14 @@ class CheckpointManager:
     # -- save ----------------------------------------------------------------
 
     def save(self, step: int, tree: PyTree, *, block: bool = True) -> None:
+        # Always join any in-flight async writer first: a blocking save racing
+        # a background _write can interleave os.replace/_retain on the same
+        # directories (two writers, one layout).
+        self.wait()
         paths, leaves, _ = _flat_with_paths(tree)
         host = [np.asarray(jax.device_get(l)) for l in leaves]
 
         if self.async_save and not block:
-            self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, paths, host), daemon=True
             )

@@ -11,6 +11,7 @@ materialize an (m, k) distance matrix.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -22,6 +23,11 @@ from repro.kernels import ops
 
 Array = jax.Array
 
+# Jitted once at import (analysis JH003): the per-call wrappers these replace
+# keyed the compile cache on a fresh lambda identity, re-tracing every call.
+_jit_kmeans = jax.jit(km.kmeans, static_argnames=("max_iters", "tol", "impl"))
+_jit_objective = jax.jit(ops.mssc_objective, static_argnames=("impl",))
+
 
 class BaselineResult(NamedTuple):
     centroids: np.ndarray
@@ -30,8 +36,11 @@ class BaselineResult(NamedTuple):
 
 
 def _full_objective(x: np.ndarray, c: Array, impl, batch: int = 1 << 17) -> float:
-    fn = jax.jit(lambda xb: ops.mssc_objective(xb, jnp.asarray(c), impl=impl))
-    return sum(float(fn(jnp.asarray(x[i : i + batch]))) for i in range(0, len(x), batch))
+    c = jnp.asarray(c)
+    return sum(
+        float(_jit_objective(jnp.asarray(x[i : i + batch]), c, impl=impl))
+        for i in range(0, len(x), batch)
+    )
 
 
 def forgy_kmeans(
@@ -46,9 +55,9 @@ def forgy_kmeans(
     """Algorithm 1: uniform-random initial centroids + Lloyd to convergence."""
     rng = np.random.default_rng(seed)
     c0 = jnp.asarray(x[rng.choice(len(x), size=k, replace=False)], jnp.float32)
-    res = jax.jit(
-        lambda xx, cc: km.kmeans(xx, cc, max_iters=max_iters, tol=tol, impl=impl)
-    )(jnp.asarray(x, jnp.float32), c0)
+    res = _jit_kmeans(
+        jnp.asarray(x, jnp.float32), c0, max_iters=max_iters, tol=tol, impl=impl
+    )
     return BaselineResult(
         np.asarray(res.centroids), float(res.objective), int(res.iterations)
     )
@@ -74,9 +83,10 @@ def pbk_bdc(
     m = len(x)
     n_seg = max(1, m // segment_size)
     perm = rng.permutation(m)
-    run = jax.jit(
-        lambda xx, cc: km.kmeans(xx, cc, max_iters=max_iters, tol=tol, impl=impl)
-    )
+
+    def run(xx, cc):
+        return _jit_kmeans(xx, cc, max_iters=max_iters, tol=tol, impl=impl)
+
     pool = []
     iters = 0
     for si in range(n_seg):
@@ -108,17 +118,18 @@ def minibatch_kmeans(
     c = jnp.asarray(x[rng.choice(len(x), size=k, replace=False)], jnp.float32)
     counts = jnp.zeros((k,), jnp.float32)
 
-    @jax.jit
-    def step(c, counts, xb):
-        idx, _ = ops.assign_clusters(xb, c, impl=impl)
-        sums, n = ops.cluster_sums(xb, idx, k, impl=impl)
-        new_counts = counts + n
-        lr = jnp.where(n > 0, n / jnp.maximum(new_counts, 1.0), 0.0)[:, None]
-        target = sums / jnp.maximum(n, 1.0)[:, None]
-        return c + lr * (target - c), new_counts
-
     for _ in range(steps):
         xb = jnp.asarray(x[rng.integers(0, len(x), size=batch_size)], jnp.float32)
-        c, counts = step(c, counts, xb)
+        c, counts = _minibatch_step(c, counts, xb, k=k, impl=impl)
     obj = _full_objective(x, c, impl)
     return BaselineResult(np.asarray(c), obj, steps)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def _minibatch_step(c, counts, xb, *, k: int, impl: str | None):
+    idx, _ = ops.assign_clusters(xb, c, impl=impl)
+    sums, n = ops.cluster_sums(xb, idx, k, impl=impl)
+    new_counts = counts + n
+    lr = jnp.where(n > 0, n / jnp.maximum(new_counts, 1.0), 0.0)[:, None]
+    target = sums / jnp.maximum(n, 1.0)[:, None]
+    return c + lr * (target - c), new_counts

@@ -19,8 +19,20 @@ import numpy as np
 from repro.core import strategies
 from repro.core.strategies import HPClustConfig, WorkerState
 from repro.kernels import ops
+from repro.resilience.preemption import PreemptionGuard
+from repro.resilience.sanitize import sanitize_window
+from repro.resilience.stream_ckpt import StreamCheckpointer
 
 Array = jax.Array
+
+
+class StreamStats(NamedTuple):
+    """Supervision counters for one ``fit_stream`` run."""
+
+    windows: int                # windows consumed (incl. skipped/resumed)
+    sanitized_rows: int         # non-finite rows masked/dropped, cumulative
+    preempted: bool             # stopped early at a preemption signal
+    resumed_at: int | None      # window index restored from checkpoint
 
 
 class HPClustResult(NamedTuple):
@@ -28,6 +40,7 @@ class HPClustResult(NamedTuple):
     objective: float            # best incumbent sample objective
     history: np.ndarray         # (rounds_total, W) incumbent objective per round
     state: WorkerState          # final worker states (for warm restarts)
+    stats: StreamStats | None = None  # stream supervision counters (fit_stream)
 
 
 @dataclasses.dataclass
@@ -55,6 +68,11 @@ class HPClust:
         windows: Iterable[np.ndarray],
         *,
         rounds_per_window: int | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1,
+        resume: bool = False,
+        sanitize: bool = True,
+        preemption_guard: PreemptionGuard | None = None,
     ) -> HPClustResult:
         """MSSC-ITD: consume successive stream windows, carrying incumbents.
 
@@ -62,29 +80,112 @@ class HPClust:
         the host has streamed in). Worker incumbents, objectives and PRNG
         state persist across windows — the algorithm behaves as if it sampled
         one infinite dataset.
+
+        Supervision (all optional, see docs/resilience.md):
+          * ``checkpoint_dir`` — save a ``WorkerState`` checkpoint every
+            ``checkpoint_every`` windows (atomic; window index = step). A
+            crash mid-stream also checkpoints the last good state before the
+            exception propagates.
+          * ``resume`` — restore the latest checkpoint and fast-forward the
+            stream past the windows it already covers. With a deterministic
+            source the resumed run replays the uninterrupted one exactly;
+            by keep-the-best monotonicity it can only match-or-improve.
+          * ``sanitize`` — mask non-finite rows host-side (counted in
+            ``result.stats.sanitized_rows``); an all-bad window is skipped.
+          * preemption — SIGTERM (or ``preemption_guard.trigger()``) stops at
+            the next window boundary after checkpointing; the result carries
+            ``stats.preempted=True``.
         """
         cfg = self.config
         rpw = rounds_per_window or cfg.rounds
         run_cfg = dataclasses.replace(cfg, rounds=rpw)
         key = jax.random.PRNGKey(self.seed)
         state: WorkerState | None = None
-        hist = []
-        for wi, window in enumerate(windows):
-            data = jnp.asarray(window, jnp.float32)
-            if state is None:
-                key, k0 = jax.random.split(key)
-                state = strategies.init_state(k0, run_cfg, data.shape[1])
-            state, metrics = _jit_run_from_state(state, data, cfg=run_cfg)
-            del wi
-            hist.append(np.asarray(metrics.best_obj))
+        hist: list[np.ndarray] = []
+        sanitized_rows = 0
+        windows_done = 0
+        resumed_at: int | None = None
+        preempted = False
+
+        ckpt = None
+        if checkpoint_dir is not None:
+            ckpt = StreamCheckpointer(checkpoint_dir)
+        if resume:
+            if ckpt is None:
+                raise ValueError("resume=True requires checkpoint_dir")
+            restored = ckpt.restore(run_cfg)
+            if restored is not None:
+                windows_done = restored.windows_done
+                state = restored.state
+                sanitized_rows = restored.sanitized_rows
+                resumed_at = windows_done
+                if restored.history.size:
+                    hist.append(restored.history)
+
+        def _history() -> np.ndarray:
+            if not hist:
+                return np.zeros((0, run_cfg.workers), np.float32)
+            return np.concatenate(hist, axis=0)
+
+        own_guard = preemption_guard is None
+        guard = PreemptionGuard() if own_guard else preemption_guard
+        if own_guard:
+            guard.install()
+        try:
+            for wi, window in enumerate(windows):
+                if wi < windows_done:
+                    continue  # fast-forward a resumed stream
+                if guard.preempted:
+                    preempted = True
+                    break
+                if sanitize:
+                    window, n_bad = sanitize_window(np.asarray(window))
+                    sanitized_rows += n_bad
+                    if window is None:  # every row non-finite: skip entirely
+                        windows_done = wi + 1
+                        continue
+                data = jnp.asarray(window, jnp.float32)
+                if state is None:
+                    key, k0 = jax.random.split(key)
+                    state = strategies.init_state(k0, run_cfg, data.shape[1])
+                state, metrics = _jit_run_from_state(state, data, cfg=run_cfg)
+                hist.append(np.asarray(metrics.best_obj))
+                windows_done = wi + 1
+                if ckpt is not None and windows_done % checkpoint_every == 0:
+                    ckpt.save(windows_done, state, _history(), sanitized_rows)
+                if guard.preempted:
+                    preempted = True
+                    break
+        except BaseException:
+            # A dying stream (or step) must not lose the incumbents: persist
+            # the last good state, then let the original failure propagate.
+            if ckpt is not None and state is not None and windows_done > 0:
+                try:
+                    ckpt.save(windows_done, state, _history(), sanitized_rows)
+                except Exception:
+                    pass  # never mask the original failure with a save error
+            raise
+        finally:
+            if own_guard:
+                guard.restore()
+
+        if preempted and ckpt is not None and state is not None \
+                and windows_done > 0:
+            ckpt.save(windows_done, state, _history(), sanitized_rows)
         if state is None:
             raise ValueError("empty stream")
         c, obj = strategies.best_of(state)
         return HPClustResult(
             centroids=np.asarray(c),
             objective=float(obj),
-            history=np.concatenate(hist, axis=0),
+            history=_history(),
             state=state,
+            stats=StreamStats(
+                windows=windows_done,
+                sanitized_rows=sanitized_rows,
+                preempted=preempted,
+                resumed_at=resumed_at,
+            ),
         )
 
     def assign(

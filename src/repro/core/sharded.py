@@ -242,12 +242,22 @@ def _rounds_body(
     all_axes = worker_axes
 
     def coop_best(c, obj, deg, axes):
+        # Poisoned incumbents (NaN/-inf) must never own the broadcast: mask
+        # to +inf before the pmin/owner selection (mirrors strategies.py).
+        obj = jnp.where(jnp.isfinite(obj), obj, jnp.inf)
         owner = _owner_mask(obj, axes, select_min=True)
         best_c, best_deg = _broadcast_from_owner((c, deg.astype(jnp.float32)), owner, axes)
         return best_c, jax.lax.pmin(obj, axes), best_deg > 0.5
 
     def round_fn(carry, r):
         c, obj, deg = carry
+        # Quarantine (device-local, no collectives): a poisoned incumbent
+        # resets to the virgin all-degenerate state so the next reseed
+        # redraws every centroid row from the live sample.
+        bad = jnp.isnan(obj) | (obj == -jnp.inf) | ~jnp.all(jnp.isfinite(c))
+        c = jnp.where(bad, jnp.zeros_like(c), c)
+        obj = jnp.where(bad, jnp.inf, obj)
+        deg = jnp.where(bad, jnp.ones_like(deg), deg)
         rkey = jax.random.fold_in(base_key, r)
         k_samp, k_seed = jax.random.split(rkey)
 
@@ -279,7 +289,9 @@ def _rounds_body(
         new_c, new_obj, counts = _lloyd_sharded(sample, seeded, cfg, inner_axis)
 
         # --- keep the best -------------------------------------------------
-        accept = new_obj < obj
+        # Non-finite candidates never displace the incumbent (-inf would
+        # otherwise win the compare and poison every later coop round).
+        accept = (new_obj < obj) & jnp.isfinite(new_obj)
         c2 = jnp.where(accept, new_c, c)
         o2 = jnp.where(accept, new_obj, obj)
         d2_ = jnp.where(accept, counts == 0, deg)
@@ -288,9 +300,11 @@ def _rounds_body(
         if cfg.strategy == "hybrid2" and pod_axis is not None:
             do = (r + 1) % cfg.sync_every == 0
             gc, go, gd = coop_best(c2, o2, d2_, all_axes)
-            # Replace the per-pod *worst* incumbent with the global best.
-            worst = _owner_mask(o2, intra_axes, select_min=False)
-            better = go < o2
+            # Replace the per-pod *worst* incumbent with the global best
+            # (non-finite incumbents count as worst, so they are replaced).
+            o2_safe = jnp.where(jnp.isfinite(o2), o2, jnp.inf)
+            worst = _owner_mask(o2_safe, intra_axes, select_min=False)
+            better = go < o2_safe
             take = do & worst & better
             c2 = jnp.where(take, gc, c2)
             o2 = jnp.where(take, go, o2)

@@ -81,6 +81,38 @@ class RoundMetrics(NamedTuple):
     best_obj: Array      # (W,) incumbent objective after the round
     accepted: Array      # (W,) bool — did the round improve the incumbent
     kmeans_iters: Array  # (W,) int32
+    quarantined: Array   # (W,) bool — poisoned incumbent re-seeded this round
+
+
+def _mask_nonfinite(obj: Array) -> Array:
+    """Objectives safe for argmin/select: NaN (poisoned arithmetic) and -inf
+    (corrupt window) map to +inf so they can never win a selection; +inf is
+    the legitimate "no incumbent yet" sentinel and maps to itself."""
+    return jnp.where(jnp.isfinite(obj), obj, jnp.inf)
+
+
+def quarantine_nonfinite(state: WorkerState) -> tuple[WorkerState, Array]:
+    """Re-seed poisoned workers from the healthiest survivor.
+
+    A worker is poisoned when its incumbent objective is NaN/-inf or any
+    incumbent centroid is non-finite. It is quarantined by copying the
+    healthiest (finite-argmin) survivor's centroids and degenerate mask and
+    resetting its objective to +inf — so its next round warm-starts from the
+    survivor (degenerate rows re-drawn by ``kmeanspp.reseed_degenerate`` in
+    ``_worker_round``) and any finite result is accepted. If *every* worker
+    is poisoned, all reset to the virgin all-degenerate state and the search
+    re-seeds from scratch, exactly like round 0.
+    """
+    finite_c = jnp.all(jnp.isfinite(state.centroids), axis=(1, 2))
+    bad = jnp.isnan(state.best_obj) | (state.best_obj == -jnp.inf) | ~finite_c
+    donor = jnp.argmin(jnp.where(bad, jnp.inf, state.best_obj))
+    donor_bad = bad[donor]  # true only when every worker is poisoned
+    donor_c = jnp.where(donor_bad, 0.0, state.centroids[donor])
+    donor_d = jnp.where(donor_bad, True, state.degenerate[donor])
+    new_c = jnp.where(bad[:, None, None], donor_c[None], state.centroids)
+    new_o = jnp.where(bad, jnp.inf, state.best_obj)
+    new_d = jnp.where(bad[:, None], donor_d[None], state.degenerate)
+    return WorkerState(new_c, new_o, new_d, state.key), bad
 
 
 def init_state(key: Array, cfg: HPClustConfig, d: int) -> WorkerState:
@@ -119,7 +151,9 @@ def _worker_round(
             sample, seeded, max_iters=cfg.kmeans_iters, tol=cfg.kmeans_tol,
             impl=cfg.impl,
         )
-    accept = res.objective < state_obj
+    # A non-finite candidate objective (corrupt sample, degenerate math) can
+    # never displace the incumbent — -inf would otherwise "win" the compare.
+    accept = (res.objective < state_obj) & jnp.isfinite(res.objective)
     new_c = jnp.where(accept, res.centroids, state_c)
     new_obj = jnp.where(accept, res.objective, state_obj)
     new_deg = jnp.where(accept, res.counts == 0, state_deg)
@@ -134,7 +168,7 @@ def _select_base(state: WorkerState, coop: Array, cfg: HPClustConfig):
     if cfg.strategy == "hybrid2":
         g = cfg.groups
         per = w // g
-        obj_g = state.best_obj.reshape(g, per)
+        obj_g = _mask_nonfinite(state.best_obj).reshape(g, per)
         best_in_group = jnp.argmin(obj_g, axis=1)  # (g,)
         flat_best = best_in_group + jnp.arange(g) * per  # index into W
         base_c_g = state.centroids[flat_best]  # (g, k, d)
@@ -142,7 +176,7 @@ def _select_base(state: WorkerState, coop: Array, cfg: HPClustConfig):
         base_c = jnp.repeat(base_c_g, per, axis=0)
         base_d = jnp.repeat(base_d_g, per, axis=0)
     else:
-        best = jnp.argmin(state.best_obj)
+        best = jnp.argmin(_mask_nonfinite(state.best_obj))
         base_c = jnp.broadcast_to(state.centroids[best], state.centroids.shape)
         base_d = jnp.broadcast_to(state.degenerate[best], state.degenerate.shape)
     coop_b = jnp.broadcast_to(coop, (w,))
@@ -166,8 +200,9 @@ def _cross_group_sync(state: WorkerState, r: Array, cfg: HPClustConfig) -> Worke
         return state
     g, per = cfg.groups, cfg.workers // cfg.groups
     do = (r + 1) % cfg.sync_every == 0
-    gbest = jnp.argmin(state.best_obj)
-    obj_g = state.best_obj.reshape(g, per)
+    safe_obj = _mask_nonfinite(state.best_obj)
+    gbest = jnp.argmin(safe_obj)
+    obj_g = safe_obj.reshape(g, per)
     worst_in_group = jnp.argmax(obj_g, axis=1) + jnp.arange(g) * per  # (g,)
     replace = jnp.zeros((cfg.workers,), jnp.bool_).at[worst_in_group].set(True)
     # Don't overwrite the global best itself.
@@ -195,6 +230,7 @@ def run_rounds(
     m, _ = data.shape
 
     def round_fn(state: WorkerState, r: Array):
+        state, quarantined = quarantine_nonfinite(state)
         coop = _coop_flag(r, cfg)
         base_c, base_deg = _select_base(state, coop, cfg)
         keys = jax.vmap(lambda kk: jax.random.split(kk))(state.key)
@@ -218,7 +254,9 @@ def run_rounds(
         )
         new_state = WorkerState(new_c, new_obj, new_deg, keys2)
         new_state = _cross_group_sync(new_state, r, cfg)
-        return new_state, RoundMetrics(new_state.best_obj, accepted, iters)
+        return new_state, RoundMetrics(
+            new_state.best_obj, accepted, iters, quarantined
+        )
 
     return jax.lax.scan(round_fn, state, jnp.arange(cfg.rounds))
 
@@ -235,6 +273,8 @@ def run_hpclust(
 
 
 def best_of(state: WorkerState) -> tuple[Array, Array]:
-    """Algorithm 3 line 21: centroids of the worker with minimum \\hat f_w."""
-    w = jnp.argmin(state.best_obj)
+    """Algorithm 3 line 21: centroids of the worker with minimum \\hat f_w.
+
+    Non-finite incumbents (poisoned workers) are masked out of the argmin."""
+    w = jnp.argmin(_mask_nonfinite(state.best_obj))
     return state.centroids[w], state.best_obj[w]

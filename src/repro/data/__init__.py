@@ -1,3 +1,15 @@
-from repro.data.pipeline import gaussian_blobs, blob_stream, token_batches
+from repro.data.pipeline import (
+    PipelineError,
+    blob_stream,
+    gaussian_blobs,
+    prefetch_iter,
+    token_batches,
+)
 
-__all__ = ["gaussian_blobs", "blob_stream", "token_batches"]
+__all__ = [
+    "PipelineError",
+    "blob_stream",
+    "gaussian_blobs",
+    "prefetch_iter",
+    "token_batches",
+]

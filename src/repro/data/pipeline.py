@@ -11,14 +11,113 @@ LM side:
   * ``token_batches``    — synthetic Zipf-distributed token streams with a
     background prefetch thread (double buffering), matching the batch
     structure of ``launch/steps.py``.
+
+Hardened I/O edge (docs/resilience.md): ``prefetch_iter`` runs any generator
+factory on a background thread behind a bounded queue. Producer exceptions
+propagate to the consumer through a sentinel (never a silent hang), ``get``
+uses bounded timeouts so a dead thread can't block forever, and the producer
+is restarted with capped, jittered exponential backoff before
+``PipelineError`` gives up.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator
+import time
+from typing import Callable, Iterator, Optional
 
 import numpy as np
+
+from repro.resilience import retry
+
+
+class PipelineError(RuntimeError):
+    """The prefetch producer died more times than the restart budget allows
+    (or stopped making progress past ``max_idle_s``)."""
+
+
+class _ProducerFailure:
+    """Queue sentinel carrying the producer thread's exception."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _ProducerDone:
+    """Queue sentinel: the generator finished cleanly (finite source)."""
+
+
+def prefetch_iter(
+    make_gen: Callable[[], Iterator],
+    *,
+    size: int = 2,
+    max_restarts: int = 3,
+    poll_s: float = 1.0,
+    max_idle_s: Optional[float] = None,
+    policy: Optional[retry.RetryPolicy] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    seed: int = 0,
+) -> Iterator:
+    """Consume ``make_gen()`` through a bounded background-prefetch queue.
+
+    The producer thread catches everything it raises and forwards it as a
+    sentinel; the consumer restarts the producer (a fresh ``make_gen()``
+    call) with backoff up to ``max_restarts`` times, then raises
+    ``PipelineError`` from the last producer error. ``poll_s`` bounds every
+    ``q.get`` so a producer that dies without reporting (killed thread) is
+    detected rather than hung on; ``max_idle_s`` optionally bounds how long
+    a live-but-stuck producer may go without yielding.
+    """
+    policy = policy or retry.RetryPolicy(
+        max_attempts=max_restarts + 1, base_delay=0.02, max_delay=0.5
+    )
+    q: queue.Queue = queue.Queue(maxsize=size)
+
+    def run(gen: Iterator) -> None:
+        try:
+            for item in gen:
+                q.put(item)
+            q.put(_ProducerDone())
+        except BaseException as e:  # noqa: BLE001 — propagate, never die silent
+            q.put(_ProducerFailure(e))
+
+    def start() -> threading.Thread:
+        t = threading.Thread(target=run, args=(make_gen(),), daemon=True)
+        t.start()
+        return t
+
+    t = start()
+    restarts = 0
+    delays = retry.backoff_delays(policy, seed=seed)
+    idle = 0.0
+    while True:
+        try:
+            item = q.get(timeout=poll_s)
+        except queue.Empty:
+            if t.is_alive():
+                idle += poll_s
+                if max_idle_s is not None and idle >= max_idle_s:
+                    raise PipelineError(
+                        f"prefetch producer made no progress for {idle:.1f}s"
+                    )
+                continue  # slow producer: keep waiting, bounded by max_idle_s
+            item = _ProducerFailure(
+                RuntimeError("prefetch thread died without reporting an error")
+            )
+        idle = 0.0
+        if isinstance(item, _ProducerDone):
+            return
+        if isinstance(item, _ProducerFailure):
+            restarts += 1
+            if restarts > max_restarts:
+                raise PipelineError(
+                    f"prefetch producer failed {restarts} time(s); "
+                    f"restart budget ({max_restarts}) exhausted"
+                ) from item.exc
+            sleep(next(delays))
+            t = start()
+            continue
+        yield item
 
 
 def gaussian_blobs(
@@ -79,17 +178,20 @@ def token_batches(
     seed: int = 0,
     zipf_a: float = 1.2,
     prefetch: int = 2,
+    max_restarts: int = 3,
 ) -> Iterator[dict]:
-    """Infinite {'tokens': (B, S) int32} batches, prefetched on a thread."""
+    """Infinite {'tokens': (B, S) int32} batches, prefetched on a thread.
 
-    def gen(q: queue.Queue):
+    The prefetch edge is supervised (``prefetch_iter``): a dying producer is
+    restarted from the same seed up to ``max_restarts`` times — the source is
+    synthetic and i.i.d., so a restart just re-draws batches.
+    """
+
+    def gen() -> Iterator[dict]:
         rng = np.random.default_rng(seed)
         while True:
             t = rng.zipf(zipf_a, size=(batch, seq)).astype(np.int64)
             t = np.minimum(t - 1, vocab - 1).astype(np.int32)
-            q.put({"tokens": t})
+            yield {"tokens": t}
 
-    q: queue.Queue = queue.Queue(maxsize=prefetch)
-    threading.Thread(target=gen, args=(q,), daemon=True).start()
-    while True:
-        yield q.get()
+    yield from prefetch_iter(gen, size=prefetch, max_restarts=max_restarts)

@@ -6,12 +6,26 @@
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import time
 
 from repro.core import HPClust, HPClustConfig
 from repro.core.hpclust import stream_from_generator
 from repro.data import blob_stream
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sharded_runner(mesh, cfg):
+    """One compiled SPMD runner per (mesh, cfg) — shardings close over the
+    mesh, so caching here (not a fresh jit per main()) keeps the compile
+    cache shared across invocations in a process (JH003)."""
+    import jax
+
+    from repro.core import sharded
+
+    fn, in_sh, out_sh = sharded.build_sharded_runner(mesh, cfg)
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
 
 
 def main(argv=None):
@@ -27,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--windows", type=int, default=4)
     ap.add_argument("--window-size", type=int, default=65536)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint worker state every window (resumable)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir")
     ap.add_argument("--sharded", action="store_true",
                     help="run the shard_map SPMD engine over the local "
                          "devices (the production code path at host scale)")
@@ -46,7 +64,9 @@ def main(argv=None):
         args.windows,
     )
     t0 = time.time()
-    res = hp.fit_stream(stream)
+    res = hp.fit_stream(
+        stream, checkpoint_dir=args.ckpt_dir, resume=args.resume
+    )
     dt = time.time() - t0
     # evaluate on a fresh holdout window from the SAME stream distribution
     holdout = next(iter(
@@ -58,6 +78,9 @@ def main(argv=None):
         "sample_objective": res.objective,
         "holdout_objective": full_obj,
         "rounds_total": int(res.history.shape[0]),
+        "windows": res.stats.windows if res.stats else None,
+        "sanitized_rows": res.stats.sanitized_rows if res.stats else None,
+        "resumed_at": res.stats.resumed_at if res.stats else None,
         "wall_s": round(dt, 2),
     }, indent=1))
     return 0
@@ -93,9 +116,8 @@ def _main_sharded(args):
     reservoir = np.broadcast_to(
         window, (workers,) + window.shape).copy()
 
-    fn, in_sh, out_sh = sharded.build_sharded_runner(mesh, cfg)
     state = sharded.init_sharded_state(cfg, args.dim)
-    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    jfn = _jit_sharded_runner(mesh, cfg)
     t0 = time.time()
     st, objs = jfn(jax.random.PRNGKey(args.seed), state, jnp.asarray(reservoir))
     objs = np.asarray(objs)

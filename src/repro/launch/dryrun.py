@@ -24,6 +24,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 """
 import argparse
+import functools
 import json
 import re
 import sys
@@ -159,6 +160,9 @@ def build_cell(arch: str, shape: str, mesh, cfg=None):
             is_leaf=lambda x: isinstance(x, P),
         )
         b_shard = batch_shardings(specs["batch"])
+        # The sharding pytrees closed over here are unhashable, so a cache
+        # key cannot be formed.
+        # analysis: allow JH003 — one lowering per cell
         fn = jax.jit(
             step,
             in_shardings=(p_shard, o_shard, b_shard),
@@ -188,6 +192,7 @@ def build_cell(arch: str, shape: str, mesh, cfg=None):
             return P(*axes)
 
         M.set_cache_spec_fn(cache_spec)
+        # analysis: allow JH003 — one lowering per cell (see above)
         fn = jax.jit(step, in_shardings=(p_shard, b_shard))
         args = (param_structs, specs["batch"])
         arg_sharding_trees = (p_shard, b_shard)
@@ -199,6 +204,7 @@ def build_cell(arch: str, shape: str, mesh, cfg=None):
                                      seq_parallel=seq_par)
         t_shard = NamedSharding(mesh, P(dp, None)) if meta["global_batch"] > 1 \
             else NamedSharding(mesh, P())
+        # analysis: allow JH003 — one lowering per cell (see above)
         fn = jax.jit(
             step,
             in_shardings=(p_shard, t_shard, NamedSharding(mesh, P()), c_shard),
@@ -338,6 +344,16 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
     return rec
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_hpclust_runner(mesh, cfg, pod_axis):
+    """One compiled SPMD runner per (mesh, cfg, pod_axis) cell — both the
+    faithful and optimized hpclust-prod cells re-lower through this cache."""
+    from repro.core.sharded import build_sharded_runner
+
+    fn, in_sh, out_sh = build_sharded_runner(mesh, cfg, pod_axis=pod_axis)
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+
 def run_hpclust_cell(*, multi_pod: bool, out_dir: Path,
                      optimized: bool = False) -> dict:
     """Dry-run the paper's own workload on the production mesh.
@@ -348,7 +364,7 @@ def run_hpclust_cell(*, multi_pod: bool, out_dir: Path,
     pass per round (kmeans_iters trimmed to the observed convergence
     budget). Recorded separately per the assignment.
     """
-    from repro.core.sharded import build_sharded_runner, ShardedState
+    from repro.core.sharded import ShardedState
     from repro.core.strategies import HPClustConfig
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -362,10 +378,7 @@ def run_hpclust_cell(*, multi_pod: bool, out_dir: Path,
         kmeans_iters=24 if optimized else 32, impl="ref",
     )
     d, m_shard = 768, 1 << 20  # CORD-19-like dims; 1M-row reservoir/worker
-    fn, in_sh, out_sh = build_sharded_runner(
-        mesh, cfg, pod_axis="pod" if multi_pod else None
-    )
-    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    jfn = _jit_hpclust_runner(mesh, cfg, "pod" if multi_pod else None)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     state = ShardedState(
         jax.ShapeDtypeStruct((workers, cfg.k, d), jnp.float32),

@@ -10,6 +10,7 @@ tolerance).
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 
 import jax
@@ -20,6 +21,13 @@ from repro.data import token_batches
 from repro.launch import steps as S
 from repro.models import model as M
 from repro.runtime import Trainer, TrainerConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_train_step(cfg, lr_steps: int):
+    """One compiled train step per (cfg, schedule) — cached so repeated main()
+    invocations in one process (tests) share the compile cache (JH003)."""
+    return jax.jit(S.make_train_step(cfg, lr_steps=lr_steps, grad_accum=1))
 
 
 def batches_for(cfg, batch, seq, seed=0):
@@ -59,7 +67,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    step_fn = jax.jit(S.make_train_step(cfg, lr_steps=args.steps, grad_accum=1))
+    step_fn = _jit_train_step(cfg, args.steps)
     opt = step_fn.__wrapped__.optimizer
 
     def init_state():

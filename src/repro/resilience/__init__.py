@@ -1,0 +1,27 @@
+"""Supervised execution for the clustering stack: retry, preemption,
+sanitization, stream checkpoints, and the chaos (fault-injection) harness.
+
+See docs/resilience.md for the failure model and the injector catalogue.
+"""
+from repro.resilience.preemption import PreemptionGuard
+from repro.resilience.retry import (
+    Deadline,
+    RetryError,
+    RetryPolicy,
+    backoff_delays,
+    retry_call,
+)
+from repro.resilience.sanitize import sanitize_window
+from repro.resilience.stream_ckpt import StreamCheckpoint, StreamCheckpointer
+
+__all__ = [
+    "Deadline",
+    "PreemptionGuard",
+    "RetryError",
+    "RetryPolicy",
+    "StreamCheckpoint",
+    "StreamCheckpointer",
+    "backoff_delays",
+    "retry_call",
+    "sanitize_window",
+]

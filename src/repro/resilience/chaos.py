@@ -1,0 +1,165 @@
+"""Deterministic fault injection (chaos harness) for the clustering stack.
+
+Every injector is seeded and composable: wrap a window stream (or a state,
+or a checkpoint manager) and the fault fires at an exact, reproducible
+point. ``tests/test_resilience.py`` drives these end-to-end; nothing here
+is imported by production code paths.
+
+Catalogue:
+  * ``corrupt_stream``   — NaN/Inf rows in chosen windows (window corruption)
+  * ``crash_stream``     — raise ``ChaosError`` when a chosen window is pulled
+  * ``preempt_stream``   — trip a ``PreemptionGuard`` before a chosen window
+  * ``poison_state``     — NaN/-Inf a worker's incumbent objective/centroids
+  * ``failing_source``   — one-shot producer deaths for prefetch threads
+  * ``CrashingCheckpointManager`` — save-time crash at chosen steps
+  * (step failures for the LM trainer already exist: ``Trainer(failure_at=...)``)
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Iterable, Iterator, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.strategies import WorkerState
+from repro.resilience.preemption import PreemptionGuard
+
+
+class ChaosError(RuntimeError):
+    """An injected fault (never raised by production code)."""
+
+
+_CORRUPT_VALUES = {"nan": np.nan, "inf": np.inf, "neginf": -np.inf}
+
+
+def corrupt_stream(
+    stream: Iterable[np.ndarray],
+    *,
+    at: Mapping[int, float],
+    mode: str = "nan",
+    seed: int = 0,
+) -> Iterator[np.ndarray]:
+    """Corrupt a fraction of rows in the windows named by ``at``.
+
+    ``at`` maps window index -> fraction of rows overwritten with the mode
+    value (``nan`` / ``inf`` / ``neginf``). Row choice is seeded.
+    """
+    if mode not in _CORRUPT_VALUES:
+        raise ValueError(f"mode {mode!r} not in {sorted(_CORRUPT_VALUES)}")
+    rng = np.random.default_rng(seed)
+    for wi, w in enumerate(stream):
+        frac = at.get(wi, 0.0)
+        if frac > 0.0:
+            w = np.array(w, copy=True)
+            n_bad = max(1, int(round(len(w) * frac)))
+            idx = rng.choice(len(w), size=min(n_bad, len(w)), replace=False)
+            w[idx] = _CORRUPT_VALUES[mode]
+        yield w
+
+
+def corrupted_rows(at: Mapping[int, float], window: int) -> int:
+    """Exact row count ``corrupt_stream`` injects (for metric assertions)."""
+    return sum(
+        min(max(1, int(round(window * frac))), window)
+        for frac in at.values()
+        if frac > 0.0
+    )
+
+
+def crash_stream(
+    stream: Iterable[np.ndarray],
+    *,
+    at_window: int,
+    exc_type: type[BaseException] = ChaosError,
+) -> Iterator[np.ndarray]:
+    """Raise when the consumer pulls window ``at_window`` (a mid-stream crash)."""
+    for wi, w in enumerate(stream):
+        if wi == at_window:
+            raise exc_type(f"injected stream crash at window {wi}")
+        yield w
+
+
+def preempt_stream(
+    stream: Iterable[np.ndarray],
+    *,
+    at_window: int,
+    guard: PreemptionGuard,
+) -> Iterator[np.ndarray]:
+    """Trip ``guard`` just before yielding window ``at_window`` — the consumer
+    sees the flag at its next check, mirroring a SIGTERM between windows."""
+    for wi, w in enumerate(stream):
+        if wi == at_window:
+            guard.trigger()
+        yield w
+
+
+def poison_state(
+    state: WorkerState,
+    workers: Iterable[int],
+    *,
+    mode: str = "nan_obj",
+) -> WorkerState:
+    """Return a copy of ``state`` with the named workers' incumbents poisoned.
+
+    Modes: ``nan_obj`` (NaN objective), ``neginf_obj`` (-inf objective — the
+    nastier case: it *wins* any unguarded argmin), ``nan_centroids``.
+    """
+    c = np.array(state.centroids, np.float32, copy=True)
+    o = np.array(state.best_obj, np.float32, copy=True)
+    for w in workers:
+        if mode == "nan_obj":
+            o[w] = np.nan
+        elif mode == "neginf_obj":
+            o[w] = -np.inf
+        elif mode == "nan_centroids":
+            c[w] = np.nan
+        else:
+            raise ValueError(f"unknown poison mode {mode!r}")
+    return WorkerState(jnp.asarray(c), jnp.asarray(o),
+                       state.degenerate, state.key)
+
+
+def failing_source(
+    make_gen: Callable[[], Iterator],
+    *,
+    fail_at: Iterable[int],
+    exc_type: type[BaseException] = ChaosError,
+) -> Callable[[], Iterator]:
+    """Wrap a generator factory so the stream dies at given *global* item
+    counts. Failures are one-shot (consumed when fired), so a restarted
+    producer makes progress — exactly a flaky-then-recovering data source.
+    """
+    pending = set(fail_at)
+    counter = itertools.count()
+
+    def factory() -> Iterator:
+        for item in make_gen():
+            i = next(counter)
+            if i in pending:
+                pending.discard(i)
+                raise exc_type(f"injected producer death at item {i}")
+            yield item
+
+    return factory
+
+
+class CrashingCheckpointManager(CheckpointManager):
+    """CheckpointManager that dies inside ``_write`` at chosen steps.
+
+    The crash fires before any byte is written; combined with the manager's
+    tmp+atomic-rename protocol this models both "preempted mid-save" and
+    "disk error on save" — the previous checkpoint must stay restorable.
+    Crashes are one-shot, so a retried save succeeds.
+    """
+
+    def __init__(self, directory, *, crash_at_steps: Iterable[int], **kw):
+        super().__init__(directory, **kw)
+        self.crash_at_steps = set(crash_at_steps)
+
+    def _write(self, step, paths, host):
+        if step in self.crash_at_steps:
+            self.crash_at_steps.discard(step)
+            raise ChaosError(f"injected save crash at step {step}")
+        super()._write(step, paths, host)

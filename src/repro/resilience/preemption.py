@@ -1,0 +1,66 @@
+"""SIGTERM-style preemption flag, shared by the trainer and ``fit_stream``.
+
+A preempted TPU/GPU worker gets SIGTERM and a grace window; the correct
+response everywhere in this codebase is the same: set a flag, finish the
+current step/window, checkpoint, exit cleanly. ``PreemptionGuard`` is that
+flag as a context manager, with
+
+  * signal installation that tolerates non-main threads (tests, servers);
+  * handler restoration on exit, so nested guards and pytest stay sane;
+  * ``trigger()`` for deterministic chaos injection — the chaos harness
+    preempts by calling it, no real signals needed.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+from typing import Iterable
+
+
+class PreemptionGuard:
+    """Latch that flips on SIGTERM (or an injected ``trigger()``)."""
+
+    def __init__(self, signals: Iterable[int] = (signal.SIGTERM,)):
+        self._signals = tuple(signals)
+        self._prev: dict[int, object] = {}
+        self._flag = threading.Event()
+        self._installed = False
+
+    # -- flag -----------------------------------------------------------------
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag.is_set()
+
+    def trigger(self, signum: int | None = None, frame=None) -> None:  # noqa: ARG002
+        """Set the flag. Doubles as the signal handler and as the chaos hook."""
+        self._flag.set()
+
+    def reset(self) -> None:
+        self._flag.clear()
+
+    # -- signal plumbing ------------------------------------------------------
+
+    def install(self) -> "PreemptionGuard":
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self.trigger)
+            except ValueError:
+                pass  # not on the main thread — trigger() still works
+        self._installed = True
+        return self
+
+    def restore(self) -> None:
+        for s, prev in self._prev.items():
+            try:
+                signal.signal(s, prev)
+            except (ValueError, TypeError):
+                pass
+        self._prev.clear()
+        self._installed = False
+
+    def __enter__(self) -> "PreemptionGuard":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.restore()

@@ -1,0 +1,120 @@
+"""Generic retry primitives: jittered exponential backoff + deadlines.
+
+The clustering and serving paths share the same failure envelope — a
+transient I/O edge (prefetch thread, checkpoint write, admission queue)
+that should be retried a bounded number of times, with backoff, under an
+overall wall-clock deadline. This module is the single implementation:
+
+  * ``RetryPolicy``    — attempts / base / cap / multiplier / jitter / deadline;
+  * ``backoff_delays`` — deterministic (seeded) jittered delay sequence, so
+    chaos tests replay bit-identically;
+  * ``Deadline``       — monotonic wall budget, injectable clock for tests;
+  * ``retry_call``     — run a callable under a policy, raising ``RetryError``
+    (chaining the last cause) once attempts or the deadline are exhausted.
+
+Consumers: ``data/pipeline.py`` (prefetch restart), ``serving/engine.py``
+(per-request deadlines), ``core/hpclust.py`` indirectly via the stream
+checkpointer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+class RetryError(RuntimeError):
+    """All attempts (or the deadline) exhausted; ``__cause__`` is the last error."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with capped, jittered exponential backoff."""
+
+    max_attempts: int = 3         # total tries, including the first
+    base_delay: float = 0.05      # seconds before the first retry
+    max_delay: float = 2.0        # cap on any single delay
+    multiplier: float = 2.0       # exponential growth factor
+    jitter: float = 0.5           # +/- fraction of the nominal delay
+    deadline_s: Optional[float] = None  # overall wall budget (None = unbounded)
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_delay < 0 or self.max_delay < 0:
+            raise ValueError("delays must be non-negative")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+
+
+class Deadline:
+    """Monotonic wall-clock budget. ``seconds=None`` never expires."""
+
+    def __init__(self, seconds: Optional[float] = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._t0 = clock()
+        self.seconds = seconds
+
+    def remaining(self) -> float:
+        if self.seconds is None:
+            return math.inf
+        return max(0.0, self.seconds - (self._clock() - self._t0))
+
+    @property
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+
+def backoff_delays(policy: RetryPolicy, *, seed: int = 0) -> Iterator[float]:
+    """Infinite sequence of capped, jittered exponential delays.
+
+    Jitter is drawn from a seeded generator so two runs with the same seed
+    (e.g. a chaos test and its re-run) sleep the exact same schedule.
+    """
+    rng = np.random.default_rng(seed)
+    nominal = policy.base_delay
+    while True:
+        j = 1.0 + policy.jitter * (2.0 * float(rng.random()) - 1.0)
+        yield min(nominal * j, policy.max_delay)
+        nominal = min(nominal * policy.multiplier, policy.max_delay)
+
+
+def retry_call(
+    fn: Callable[[], object],
+    *,
+    policy: RetryPolicy = RetryPolicy(),
+    retry_on: tuple[type[BaseException], ...] = (Exception,),
+    seed: int = 0,
+    sleep: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.monotonic,
+    on_retry: Optional[Callable[[int, BaseException, float], None]] = None,
+):
+    """Call ``fn`` until it succeeds, a non-retryable error escapes, the
+    attempt budget runs out, or the deadline expires.
+
+    ``on_retry(attempt, error, delay)`` fires before each backoff sleep —
+    the hook the pipeline uses to log producer restarts.
+    """
+    deadline = Deadline(policy.deadline_s, clock=clock)
+    delays = backoff_delays(policy, seed=seed)
+    last: Optional[BaseException] = None
+    attempt = 0
+    for attempt in range(1, policy.max_attempts + 1):
+        try:
+            return fn()
+        except retry_on as e:
+            last = e
+            if attempt >= policy.max_attempts or deadline.expired:
+                break
+            delay = min(next(delays), max(deadline.remaining(), 0.0))
+            if on_retry is not None:
+                on_retry(attempt, e, delay)
+            sleep(delay)
+    raise RetryError(
+        f"gave up after {attempt} attempt(s)"
+        + ("" if not deadline.expired else " (deadline expired)")
+    ) from last

@@ -1,0 +1,42 @@
+"""Stream-window sanitization: drop/mask non-finite rows before the device.
+
+The paper's noise experiments (SS7.1) assume noise is *finite*; on real
+streams a corrupted shard or overflowed feature produces NaN/Inf rows, and a
+single such row drives every distance, objective and centroid to NaN —
+poisoning all workers at once. Sanitization happens host-side, before
+``jnp.asarray``, so the compiled program never sees a non-finite sample.
+
+Masked rows are replaced (cyclically) by surviving rows rather than dropped:
+window shape is part of the jit cache key, so shape-preserving repair keeps
+one compiled program per window size instead of one per corruption pattern.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def sanitize_window(x: np.ndarray) -> tuple[Optional[np.ndarray], int]:
+    """Replace non-finite rows of a (m, d) window with finite ones.
+
+    Returns ``(clean_window, n_bad_rows)``. The clean window has the same
+    shape and dtype as the input; bad rows are overwritten by surviving rows
+    chosen cyclically (deterministic, seed-free). If *every* row is
+    non-finite the window is unusable and ``(None, m)`` is returned — the
+    caller should skip it and count it.
+    """
+    x = np.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"expected a (m, d) window, got shape {x.shape}")
+    bad = ~np.isfinite(x).all(axis=1)
+    n_bad = int(bad.sum())
+    if n_bad == 0:
+        return x, 0
+    good_idx = np.flatnonzero(~bad)
+    if good_idx.size == 0:
+        return None, n_bad
+    out = np.array(x, copy=True)
+    fill = good_idx[np.arange(n_bad) % good_idx.size]
+    out[np.flatnonzero(bad)] = x[fill]
+    return out, n_bad

@@ -1,0 +1,98 @@
+"""Checkpointing for ``HPClust.fit_stream``: WorkerState + stream cursor.
+
+Layout reuses ``CheckpointManager`` verbatim (atomic tmp+rename writes,
+sha256 integrity, retention), with the *window index* as the step number:
+
+    <dir>/step_<windows_done>/leaves.npz   # flattened payload leaves
+    <dir>/step_<windows_done>/meta.json
+
+Payload pytree (dict keys sorted by tree_flatten, so the layout is stable):
+
+    history         (rounds_so_far, W) f32  — per-round incumbent objectives
+    sanitized_rows  int64                   — cumulative dropped/masked rows
+    state           WorkerState             — centroids, best_obj,
+                                              degenerate masks, PRNG keys
+
+Because ``WorkerState.key`` rides along, a resumed stream replays the exact
+per-worker sample draws the uninterrupted run would have made: by
+keep-the-best monotonicity the resumed run's final objective can only
+match-or-improve the incumbent it restarted from, and with an identical
+window source it matches the uninterrupted run bit-for-bit.
+"""
+from __future__ import annotations
+
+import os
+from typing import TYPE_CHECKING, Any, NamedTuple, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+if TYPE_CHECKING:  # repro.core imports this module — keep the cycle lazy
+    from repro.core.strategies import HPClustConfig, WorkerState
+
+
+class StreamCheckpoint(NamedTuple):
+    windows_done: int
+    state: Any                  # WorkerState; leaves are host numpy arrays
+    history: np.ndarray         # (rounds_so_far, W) f32
+    sanitized_rows: int
+
+
+def _template(cfg: "HPClustConfig") -> dict:
+    from repro.core.strategies import WorkerState
+
+    # Only leaf COUNT and dtypes matter to CheckpointManager.restore; shapes
+    # come from the stored arrays (this is what makes the template d-free).
+    return {
+        "history": np.zeros((0, cfg.workers), np.float32),
+        "sanitized_rows": np.int64(0),
+        "state": WorkerState(
+            centroids=np.zeros((0,), np.float32),
+            best_obj=np.zeros((0,), np.float32),
+            degenerate=np.zeros((0,), np.bool_),
+            key=np.zeros((0,), np.uint32),
+        ),
+    }
+
+
+class StreamCheckpointer:
+    """Periodic WorkerState checkpoints keyed by windows-consumed."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3,
+                 async_save: bool = False):
+        self.mgr = CheckpointManager(directory, keep=keep,
+                                     async_save=async_save)
+
+    def latest(self) -> Optional[int]:
+        return self.mgr.latest_step()
+
+    def save(
+        self,
+        windows_done: int,
+        state: "WorkerState",
+        history: np.ndarray,
+        sanitized_rows: int,
+        *,
+        block: bool = True,
+    ) -> None:
+        tree = {
+            "history": np.asarray(history, np.float32),
+            "sanitized_rows": np.int64(sanitized_rows),
+            "state": state,
+        }
+        self.mgr.save(windows_done, tree, block=block)
+
+    def restore(
+        self, cfg: "HPClustConfig", *, step: Optional[int] = None
+    ) -> Optional[StreamCheckpoint]:
+        """Latest (or given) checkpoint, or None when the directory is empty."""
+        if step is None and self.mgr.latest_step() is None:
+            return None
+        windows_done, tree = self.mgr.restore(_template(cfg), step=step)
+        return StreamCheckpoint(
+            windows_done=int(windows_done),
+            state=tree["state"],
+            history=np.asarray(tree["history"], np.float32),
+            sanitized_rows=int(tree["sanitized_rows"]),
+        )

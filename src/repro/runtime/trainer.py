@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import signal
 import time
 from pathlib import Path
 from typing import Any, Callable, Iterator
@@ -31,6 +30,7 @@ from typing import Any, Callable, Iterator
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.resilience.preemption import PreemptionGuard
 
 
 @dataclasses.dataclass
@@ -67,16 +67,17 @@ class Trainer:
         self.shardings = shardings
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
                                       async_save=cfg.async_save)
-        self._preempted = False
+        self.guard = PreemptionGuard()
         self.metrics_log: list[dict] = []
 
-    def _install_preemption_handler(self):
-        def handler(signum, frame):  # noqa: ARG001
-            self._preempted = True
-        try:
-            signal.signal(signal.SIGTERM, handler)
-        except ValueError:
-            pass  # not on the main thread (tests)
+    @property
+    def _preempted(self) -> bool:
+        return self.guard.preempted
+
+    def preempt(self) -> None:
+        """Request a clean stop at the next step boundary (chaos/test hook —
+        the same path a real SIGTERM takes)."""
+        self.guard.trigger()
 
     def _restore_or_init(self):
         params, opt_state = self.init_state()
@@ -95,24 +96,31 @@ class Trainer:
                 f.write(json.dumps(rec) + "\n")
 
     def run(self) -> dict:
-        self._install_preemption_handler()
+        self.guard.install()
         restarts = 0
-        while True:
-            try:
-                return self._run_once(restarts)
-            except StepFailure as e:
-                restarts += 1
-                if restarts > self.cfg.max_restarts:
-                    raise
-                self._log({"event": "restart", "restarts": restarts,
-                           "error": str(e)})
+        try:
+            while True:
+                try:
+                    return self._run_once(restarts)
+                except StepFailure as e:
+                    restarts += 1
+                    if restarts > self.cfg.max_restarts:
+                        raise
+                    self._log({"event": "restart", "restarts": restarts,
+                               "error": str(e)})
+        finally:
+            self.guard.restore()
 
     def _run_once(self, restarts: int) -> dict:
         step, params, opt_state = self._restore_or_init()
         t0 = time.time()
         while step < self.cfg.total_steps:
             if self._preempted:
-                self.ckpt.save(step - 1, (params, opt_state))
+                # A step-0 preemption has nothing completed to persist; saving
+                # step-1 would write an unparseable "step_-000000001" dir that
+                # all_steps() can never restore.
+                if step > 0:
+                    self.ckpt.save(step - 1, (params, opt_state))
                 self._log({"event": "preempted", "step": step})
                 return {"status": "preempted", "step": step,
                         "restarts": restarts}

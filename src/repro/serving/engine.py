@@ -14,6 +14,8 @@ same ones the dry-run lowers for the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any, Callable
 
 import jax
@@ -24,18 +26,36 @@ from repro.models import model as M
 from repro.models.common import ModelConfig
 
 
+class AdmissionError(RuntimeError):
+    """The bounded admission queue is full — shed load at the edge."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_tokens: int = 16
+    deadline_s: float | None = None  # wall budget from submission (None = off)
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    timed_out: bool = False
+    submitted_at: float | None = None  # set by ServeEngine.submit
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fns(cfg: ModelConfig):
+    """One compiled (prefill, decode) pair per model config, shared across
+    every engine instance (JH003: a per-instance jit defeats the cache)."""
+    prefill = jax.jit(functools.partial(M.prefill, cfg))
+    decode = jax.jit(functools.partial(M.decode_step, cfg))
+    return prefill, decode
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, eos_id: int | None = None):
+                 max_len: int = 256, eos_id: int | None = None,
+                 max_queue: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
         if cfg.family in ("encdec",):
             raise NotImplementedError("engine covers causal-LM families")
         self.cfg = cfg
@@ -43,20 +63,39 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.max_queue = max_queue
+        self.clock = clock
         self.caches = M.init_cache(cfg, slots, max_len)
         self.pos = np.zeros((slots,), np.int32)        # next position per slot
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self._finished: list[Request] = []  # completion-ordered, drained by run
 
-        self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
-        self._decode = jax.jit(
-            lambda p, t, pos, c: M.decode_step(cfg, p, t, pos, c)
-        )
+        self._prefill, self._decode = _step_fns(cfg)
 
     # -- request management ---------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Admit into the bounded queue; raises AdmissionError when full."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise AdmissionError(
+                f"admission queue full ({self.max_queue} waiting); "
+                f"retry with backoff (repro.resilience.retry)"
+            )
+        req.submitted_at = self.clock()
         self.queue.append(req)
+
+    def _expired(self, req: Request) -> bool:
+        return (
+            req.deadline_s is not None
+            and req.submitted_at is not None
+            and self.clock() - req.submitted_at > req.deadline_s
+        )
+
+    def _finish(self, req: Request, *, timed_out: bool = False) -> None:
+        req.done = True
+        req.timed_out = timed_out
+        self._finished.append(req)
 
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.active):
@@ -87,9 +126,16 @@ class ServeEngine:
         del tok
 
     def admit(self) -> int:
-        """Move queued requests into free slots. Returns number admitted."""
+        """Move queued requests into free slots. Returns number admitted.
+
+        Requests whose ``deadline_s`` already elapsed while queued are
+        finished as ``timed_out`` instead of wasting a prefill.
+        """
         n = 0
         while self.queue:
+            if self._expired(self.queue[0]):
+                self._finish(self.queue.pop(0), timed_out=True)
+                continue
             slot = self._free_slot()
             if slot is None:
                 break
@@ -101,8 +147,14 @@ class ServeEngine:
 
     def step(self) -> int:
         """One decode step for all active slots. Returns #finished."""
+        finished = 0
+        for i, r in enumerate(self.active):
+            if r is not None and self._expired(r):
+                self._finish(r, timed_out=True)
+                self.active[i] = None
+                finished += 1
         if all(r is None for r in self.active):
-            return 0
+            return finished
         last = np.zeros((self.slots, 1), np.int32)
         for i, r in enumerate(self.active):
             if r is not None and r.out:
@@ -116,7 +168,6 @@ class ServeEngine:
         logits, self.caches = self._decode(
             self.params, jnp.asarray(last), jnp.int32(pos), self.caches
         )
-        finished = 0
         for i, r in enumerate(self.active):
             if r is None:
                 continue
@@ -125,12 +176,14 @@ class ServeEngine:
             self.pos[i] = pos + 1
             if (self.eos_id is not None and tok == self.eos_id) or \
                     len(r.out) >= r.max_tokens:
-                r.done = True
+                self._finish(r)
                 self.active[i] = None
                 finished += 1
         return finished
 
     def run(self, requests: list[Request], *, max_steps: int = 1000) -> list[Request]:
+        """Drive submitted requests to completion; returns them in the order
+        they finished (completed or timed out)."""
         for r in requests:
             self.submit(r)
         done: list[Request] = []
@@ -138,8 +191,13 @@ class ServeEngine:
         while (self.queue or any(self.active)) and steps < max_steps:
             self.admit()
             self.step()
-            done.extend(
-                [r for r in requests if r.done and r not in done]
-            )
+            # Completion order comes from the engine's _finished log — an
+            # O(done) drain, not an O(n^2) rescan of every request per step.
+            if self._finished:
+                done.extend(self._finished)
+                self._finished.clear()
             steps += 1
-        return requests
+        if self._finished:
+            done.extend(self._finished)
+            self._finished.clear()
+        return done

@@ -32,6 +32,13 @@ def _matmul_kernel(x_ref, c_ref, o_ref, acc_ref, *, nd: int):
         o_ref[...] = acc_ref[...]
 
 
+@functools.lru_cache(maxsize=None)
+def _cached_step(nd: int):
+    # Memoized jit factory: constructed once per key, not per call — the
+    # sanctioned JH003 alternative; must stay silent.
+    return jax.jit(functools.partial(_matmul_kernel, nd=nd))
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "block_k", "block_d"))
 def matmul(
     x: jax.Array,

@@ -80,6 +80,80 @@ def test_vmem_estimate_details_in_message():
 
 
 # ---------------------------------------------------------------------------
+# suppressions: lru_cache factories and inline pragmas
+# ---------------------------------------------------------------------------
+
+
+_JIT_IN_BODY = """
+import functools
+import jax
+
+def per_call(fn):
+    return jax.jit(fn)
+"""
+
+
+def test_jh003_fires_without_suppression():
+    findings = analyze_source(_JIT_IN_BODY, path="x.py")
+    assert {f.code for f in findings} == {"JH003"}
+
+
+@pytest.mark.parametrize(
+    "deco",
+    [
+        "functools.lru_cache(maxsize=None)",
+        "functools.lru_cache",
+        "lru_cache",
+        "functools.cache",
+    ],
+)
+def test_jh003_exempts_cached_factories(deco):
+    src = _JIT_IN_BODY.replace("def per_call", f"@{deco}\ndef per_call")
+    findings = analyze_source(src, path="x.py")
+    assert findings == [], [f"{f.code}@{f.line}: {f.message}" for f in findings]
+
+
+def test_jh003_exempts_nested_function_in_cached_factory():
+    src = """
+import functools
+import jax
+
+@functools.lru_cache(maxsize=None)
+def factory(n):
+    def build():
+        return jax.jit(lambda x: x * n)
+    return build()
+"""
+    assert analyze_source(src, path="x.py") == []
+
+
+@pytest.mark.parametrize("placement", ["above", "same"])
+def test_pragma_suppresses_named_code(placement):
+    if placement == "above":
+        body = ("    # analysis: allow JH003 — justified here\n"
+                "    return jax.jit(fn)")
+    else:
+        body = "    return jax.jit(fn)  # analysis: allow JH003"
+    src = f"import jax\n\ndef per_call(fn):\n{body}\n"
+    assert analyze_source(src, path="x.py") == []
+
+
+def test_pragma_only_suppresses_listed_codes():
+    src = ("import jax\n\ndef per_call(fn):\n"
+           "    # analysis: allow PK001\n"
+           "    return jax.jit(fn)\n")
+    findings = analyze_source(src, path="x.py")
+    assert {f.code for f in findings} == {"JH003"}
+
+
+def test_pragma_multiple_codes():
+    src = ("import jax\n\ndef per_call(fn):\n"
+           "    # analysis: allow PK001, JH003\n"
+           "    return jax.jit(fn)\n")
+    assert analyze_source(src, path="x.py") == []
+
+
+# ---------------------------------------------------------------------------
 # baseline round-trip
 # ---------------------------------------------------------------------------
 
