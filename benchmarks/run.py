@@ -9,9 +9,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
     seconds per step.
 
 Scale knob: REPRO_BENCH_SCALE (default 0.5 — CPU container).
+
+Besides the CSV on stdout, results are written machine-readably to
+``BENCH_hpclust.json`` (override with REPRO_BENCH_JSON) as
+``{name: {"us_per_call": ..., "derived": ...}}`` for diffing across runs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -85,6 +90,7 @@ def _rows_roofline():
 
 def main() -> None:
     scale = float(os.environ.get("REPRO_BENCH_SCALE", "0.5"))
+    json_path = os.environ.get("REPRO_BENCH_JSON", "BENCH_hpclust.json")
     print("name,us_per_call,derived")
     sections = [
         _rows_kernels(),
@@ -94,10 +100,19 @@ def main() -> None:
         _rows_fig3(),
         _rows_roofline(),
     ]
+    results: dict[str, dict[str, float]] = {}
     for rows in sections:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.4f}")
             sys.stdout.flush()
+            results[name] = {"us_per_call": round(us, 1),
+                             "derived": round(float(derived), 4)}
+    if json_path:
+        with open(json_path, "w", encoding="utf-8") as fh:
+            json.dump(results, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(results)} result(s) to {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Static-analysis suite for the repro JAX/Pallas codebase.
 
-Three check families guard the invariants the paper's performance claims
+Four check families guard the invariants the paper's performance claims
 rest on (see docs/static_analysis.md):
 
   PK*  Pallas kernel structure: grid/BlockSpec arity, (8, 128) tile
@@ -8,6 +8,8 @@ rest on (see docs/static_analysis.md):
   JH*  jit hygiene: static_argnames/donate_argnums vs signature, jit
        constructed per call, unhashable statics, host calls in traces.
   DT*  dtype discipline: float64 leaks, MXU accumulation dtype.
+  OB*  observability discipline: bare print() in library code (route
+       through repro.obs instead; CLIs and benchmarks are exempt).
 
 Programmatic API::
 

@@ -1,0 +1,61 @@
+"""OB: observability discipline — no bare ``print`` in library code.
+
+Library modules under ``src/repro/`` must report through ``repro.obs``
+(spans, events, metrics) or raise — a bare ``print`` bypasses the trace,
+interleaves arbitrarily across threads, and is invisible to the JSONL
+summarizer. CLI entry points are where human-readable output belongs, so
+launch drivers, ``cli.py``/``__main__.py`` modules and ``benchmarks/`` are
+exempt.
+
+Codes:
+  OB001  bare print() call in library code (use repro.obs or logging)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutils as au
+from repro.analysis.core import ModuleContext, register
+
+# Path parts / basenames where print IS the product (human-facing CLIs).
+_EXEMPT_PARTS = ("launch", "benchmarks")
+_EXEMPT_BASENAMES = ("cli.py", "__main__.py")
+
+
+def _is_exempt(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    if parts and parts[-1] in _EXEMPT_BASENAMES:
+        return True
+    return any(p in _EXEMPT_PARTS for p in parts)
+
+
+@register(
+    "OB001",
+    "print-in-library",
+    "Bare print() in library code bypasses repro.obs tracing and interleaves "
+    "across threads — emit an obs event/metric or raise instead (launch "
+    "CLIs, cli.py/__main__.py and benchmarks/ are exempt).",
+)
+def check_print_in_library(ctx: ModuleContext):
+    if _is_exempt(ctx.path):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if au.call_name(node) != "print":
+            continue
+        # A shadowed local `print = ...` binding is not the builtin; keep the
+        # check simple and only skip the common kwargs-free stderr idiom:
+        # print(..., file=sys.stderr) is deliberate diagnostics.
+        file_kw = next((kw for kw in node.keywords if kw.arg == "file"), None)
+        if file_kw is not None:
+            target = au.dotted_name(file_kw.value) if isinstance(
+                file_kw.value, (ast.Attribute, ast.Name)) else None
+            if target in ("sys.stderr", "stderr"):
+                continue
+        yield ctx.finding(
+            "OB001", node,
+            "bare print() in library code — route through repro.obs "
+            "(event/inc/span) so it lands in the trace, or write to "
+            "sys.stderr if it is a deliberate diagnostic",
+        )

@@ -18,7 +18,7 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.analysis",
         description="Static analysis for the repro JAX/Pallas codebase: "
         "Pallas kernel invariants (PK), jit hygiene (JH), dtype "
-        "discipline (DT).",
+        "discipline (DT), observability discipline (OB).",
     )
     p.add_argument("paths", nargs="*", default=["src"],
                    help="files or directories to analyze (default: src)")

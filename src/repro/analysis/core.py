@@ -142,7 +142,12 @@ def all_checks() -> list[Check]:
 
 def _load_builtin_checks() -> None:
     # Import for registration side effects; idempotent via sys.modules.
-    from repro.analysis import checks_dtype, checks_jit, checks_pallas  # noqa: F401
+    from repro.analysis import (  # noqa: F401
+        checks_dtype,
+        checks_jit,
+        checks_obs,
+        checks_pallas,
+    )
 
 
 def select_checks(select: Optional[Iterable[str]] = None) -> list[Check]:

@@ -16,14 +16,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import strategies
-from repro.core.strategies import HPClustConfig, WorkerState
+from repro.core.strategies import HPClustConfig, RoundMetrics, WorkerState
 from repro.kernels import ops
 from repro.resilience.preemption import PreemptionGuard
 from repro.resilience.sanitize import sanitize_window
 from repro.resilience.stream_ckpt import StreamCheckpointer
 
 Array = jax.Array
+
+
+def _emit_round_metrics(metrics: RoundMetrics, *, window: int | None = None) -> None:
+    """Publish per-round competition telemetry (objective descent, accepted
+    rounds, quarantines) as ``hpclust.round`` trace events. No-op (and no
+    device->host transfer) when tracing is disabled."""
+    rec = obs.get_recorder()
+    if rec is None:
+        return
+    best = np.asarray(metrics.best_obj)        # (rounds, W)
+    accepted = np.asarray(metrics.accepted)
+    quarantined = np.asarray(metrics.quarantined)
+    w = best.shape[1] if best.ndim == 2 else 1
+    for r in range(best.shape[0]):
+        rec.event(
+            "hpclust.round",
+            round=r,
+            window=window,
+            best_obj=float(best[r].min()),
+            accepted=f"{int(accepted[r].sum())}/{w}",
+            quarantined=int(quarantined[r].sum()),
+        )
+    rec.inc("hpclust.rounds", int(best.shape[0]))
+    n_quar = int(quarantined.sum())
+    if n_quar:
+        rec.inc("resilience.quarantined_workers", n_quar)
+        rec.event("resilience.quarantine", window=window, workers=n_quar)
 
 
 class StreamStats(NamedTuple):
@@ -54,7 +82,11 @@ class HPClust:
         """Cluster a (m, d) window (single-shot MSSC)."""
         key = jax.random.PRNGKey(self.seed)
         data = jnp.asarray(x, jnp.float32)
-        state, metrics = _jit_run_hpclust(key, data, cfg=self.config)
+        with obs.span("hpclust.fit", rows=int(data.shape[0]),
+                      strategy=self.config.strategy, k=self.config.k,
+                      workers=self.config.workers):
+            state, metrics = _jit_run_hpclust(key, data, cfg=self.config)
+            _emit_round_metrics(metrics)
         c, obj = strategies.best_of(state)
         return HPClustResult(
             centroids=np.asarray(c),
@@ -121,6 +153,7 @@ class HPClust:
                 resumed_at = windows_done
                 if restored.history.size:
                     hist.append(restored.history)
+                obs.event("resilience.resumed", window=windows_done)
 
         def _history() -> np.ndarray:
             if not hist:
@@ -138,21 +171,36 @@ class HPClust:
                 if guard.preempted:
                     preempted = True
                     break
-                if sanitize:
-                    window, n_bad = sanitize_window(np.asarray(window))
-                    sanitized_rows += n_bad
-                    if window is None:  # every row non-finite: skip entirely
-                        windows_done = wi + 1
-                        continue
-                data = jnp.asarray(window, jnp.float32)
-                if state is None:
-                    key, k0 = jax.random.split(key)
-                    state = strategies.init_state(k0, run_cfg, data.shape[1])
-                state, metrics = _jit_run_from_state(state, data, cfg=run_cfg)
-                hist.append(np.asarray(metrics.best_obj))
-                windows_done = wi + 1
-                if ckpt is not None and windows_done % checkpoint_every == 0:
-                    ckpt.save(windows_done, state, _history(), sanitized_rows)
+                with obs.span("stream.window", window=wi) as w_span:
+                    if sanitize:
+                        with obs.span("sanitize.window"):
+                            window, n_bad = sanitize_window(np.asarray(window))
+                        sanitized_rows += n_bad
+                        if n_bad:
+                            obs.inc("stream.sanitized_rows", n_bad)
+                        if window is None:  # every row non-finite: skip
+                            windows_done = wi + 1
+                            obs.event("stream.window_skipped", window=wi)
+                            continue
+                    data = jnp.asarray(window, jnp.float32)
+                    w_span.set(rows=int(data.shape[0]))
+                    if state is None:
+                        key, k0 = jax.random.split(key)
+                        state = strategies.init_state(
+                            k0, run_cfg, data.shape[1])
+                    with obs.span("hpclust.rounds", rounds=run_cfg.rounds):
+                        state, metrics = _jit_run_from_state(
+                            state, data, cfg=run_cfg)
+                        _emit_round_metrics(metrics, window=wi)
+                    hist.append(np.asarray(metrics.best_obj))
+                    windows_done = wi + 1
+                    obs.inc("stream.windows")
+                    obs.inc("stream.rows", int(data.shape[0]))
+                    if ckpt is not None \
+                            and windows_done % checkpoint_every == 0:
+                        with obs.span("ckpt.save", window=windows_done):
+                            ckpt.save(windows_done, state, _history(),
+                                      sanitized_rows)
                 if guard.preempted:
                     preempted = True
                     break
@@ -169,6 +217,8 @@ class HPClust:
             if own_guard:
                 guard.restore()
 
+        if preempted:
+            obs.event("resilience.preempted", window=windows_done)
         if preempted and ckpt is not None and state is not None \
                 and windows_done > 0:
             ckpt.save(windows_done, state, _history(), sanitized_rows)
@@ -193,16 +243,17 @@ class HPClust:
         *, batch: int = 1 << 16,
     ) -> np.ndarray:
         """Final full-dataset assignment (paper SS3 last step), batched."""
-        # ops.assign_clusters is already jitted at module level; calling it
-        # directly shares one compile cache across every estimator instance.
+        # ops.assign_clusters dispatches through one module-level jit, so
+        # every estimator instance shares a single compile cache.
         c = jnp.asarray(centroids, jnp.float32)
         out = []
         x = np.asarray(x, np.float32)
-        for i in range(0, len(x), batch):
-            idx, _ = ops.assign_clusters(
-                jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
-            )
-            out.append(np.asarray(idx))
+        with obs.span("hpclust.assign", rows=len(x), batch=batch):
+            for i in range(0, len(x), batch):
+                idx, _ = ops.assign_clusters(
+                    jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
+                )
+                out.append(np.asarray(idx))
         return np.concatenate(out) if out else np.zeros((0,), np.int32)
 
     def objective(self, x, centroids, *, batch: int = 1 << 16) -> float:
@@ -210,12 +261,13 @@ class HPClust:
         c = jnp.asarray(centroids, jnp.float32)
         x = np.asarray(x, np.float32)
         total = 0.0
-        for i in range(0, len(x), batch):
-            total += float(
-                ops.mssc_objective(
-                    jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
+        with obs.span("hpclust.objective", rows=len(x), batch=batch):
+            for i in range(0, len(x), batch):
+                total += float(
+                    ops.mssc_objective(
+                        jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
+                    )
                 )
-            )
         return total
 
 

@@ -36,6 +36,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.strategies import HPClustConfig
+from repro.obs import jaxhooks
 
 Array = jax.Array
 _INT_MAX = jnp.iinfo(jnp.int32).max
@@ -254,39 +255,45 @@ def _rounds_body(
         # Quarantine (device-local, no collectives): a poisoned incumbent
         # resets to the virgin all-degenerate state so the next reseed
         # redraws every centroid row from the live sample.
-        bad = jnp.isnan(obj) | (obj == -jnp.inf) | ~jnp.all(jnp.isfinite(c))
-        c = jnp.where(bad, jnp.zeros_like(c), c)
-        obj = jnp.where(bad, jnp.inf, obj)
-        deg = jnp.where(bad, jnp.ones_like(deg), deg)
+        with jaxhooks.named_scope("round.quarantine"):
+            bad = jnp.isnan(obj) | (obj == -jnp.inf) | ~jnp.all(jnp.isfinite(c))
+            c = jnp.where(bad, jnp.zeros_like(c), c)
+            obj = jnp.where(bad, jnp.inf, obj)
+            deg = jnp.where(bad, jnp.ones_like(deg), deg)
         rkey = jax.random.fold_in(base_key, r)
         k_samp, k_seed = jax.random.split(rkey)
 
         # --- coordination: choose the warm start -------------------------
-        if cfg.strategy in ("inner", "sequential", "competitive"):
-            base_c, base_deg = c, deg
-        elif cfg.strategy == "cooperative":
-            base_c, _, base_deg = coop_best(c, obj, deg, all_axes)
-        elif cfg.strategy == "hybrid":
-            bc, _, bd = coop_best(c, obj, deg, all_axes)
-            coop = r >= cfg.effective_t1
-            base_c = jnp.where(coop, bc, c)
-            base_deg = jnp.where(coop, bd, deg)
-        else:  # hybrid2: intra-pod every round, cross-pod every sync_every
-            bc, _, bd = coop_best(c, obj, deg, intra_axes)
-            coop = r >= cfg.effective_t1
-            base_c = jnp.where(coop, bc, c)
-            base_deg = jnp.where(coop, bd, deg)
+        with jaxhooks.named_scope("round.coop_select"):
+            if cfg.strategy in ("inner", "sequential", "competitive"):
+                base_c, base_deg = c, deg
+            elif cfg.strategy == "cooperative":
+                base_c, _, base_deg = coop_best(c, obj, deg, all_axes)
+            elif cfg.strategy == "hybrid":
+                bc, _, bd = coop_best(c, obj, deg, all_axes)
+                coop = r >= cfg.effective_t1
+                base_c = jnp.where(coop, bc, c)
+                base_deg = jnp.where(coop, bd, deg)
+            else:  # hybrid2: intra-pod every round, cross-pod every sync_every
+                bc, _, bd = coop_best(c, obj, deg, intra_axes)
+                coop = r >= cfg.effective_t1
+                base_c = jnp.where(coop, bc, c)
+                base_deg = jnp.where(coop, bd, deg)
 
         # --- sample: stratified over the inner axis ----------------------
-        k_samp_loc = jax.random.fold_in(k_samp, iidx)
-        idx = jax.random.randint(k_samp_loc, (s_loc,), 0, m_shard)
-        sample = res[idx]  # (s_loc, d)
+        with jaxhooks.named_scope("round.sample"):
+            k_samp_loc = jax.random.fold_in(k_samp, iidx)
+            idx = jax.random.randint(k_samp_loc, (s_loc,), 0, m_shard)
+            sample = res[idx]  # (s_loc, d)
 
         # --- reseed degenerate + Lloyd ------------------------------------
-        seeded = _reseed_degenerate_sharded(
-            k_seed, sample, base_c, base_deg, cfg, inner_axis
-        )
-        new_c, new_obj, counts = _lloyd_sharded(sample, seeded, cfg, inner_axis)
+        with jaxhooks.named_scope("round.reseed"):
+            seeded = _reseed_degenerate_sharded(
+                k_seed, sample, base_c, base_deg, cfg, inner_axis
+            )
+        with jaxhooks.named_scope("round.lloyd"):
+            new_c, new_obj, counts = _lloyd_sharded(
+                sample, seeded, cfg, inner_axis)
 
         # --- keep the best -------------------------------------------------
         # Non-finite candidates never displace the incumbent (-inf would

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import kmeans as km
 from repro.core import kmeanspp
+from repro.obs import jaxhooks
 
 Array = jax.Array
 
@@ -230,30 +231,37 @@ def run_rounds(
     m, _ = data.shape
 
     def round_fn(state: WorkerState, r: Array):
-        state, quarantined = quarantine_nonfinite(state)
-        coop = _coop_flag(r, cfg)
-        base_c, base_deg = _select_base(state, coop, cfg)
-        keys = jax.vmap(lambda kk: jax.random.split(kk))(state.key)
-        sample_keys, next_keys = keys[:, 0], keys[:, 1]
-        idx = jax.vmap(
-            lambda kk: jax.random.randint(kk, (cfg.sample_size,), 0, m)
-        )(sample_keys)
-        samples = data[idx]  # (W, s, d)
-        new_c, new_obj, new_deg, keys2, accepted, iters = jax.vmap(
-            lambda c, o, dg, kk, bc, bd, sm: _worker_round(
-                c, o, dg, kk, bc, bd, sm, cfg
+        # named_scope labels survive into HLO metadata, so XLA profiles of
+        # the scanned round body stay attributable to algorithm phases.
+        with jaxhooks.named_scope("round.quarantine"):
+            state, quarantined = quarantine_nonfinite(state)
+        with jaxhooks.named_scope("round.select_base"):
+            coop = _coop_flag(r, cfg)
+            base_c, base_deg = _select_base(state, coop, cfg)
+        with jaxhooks.named_scope("round.sample"):
+            keys = jax.vmap(lambda kk: jax.random.split(kk))(state.key)
+            sample_keys, next_keys = keys[:, 0], keys[:, 1]
+            idx = jax.vmap(
+                lambda kk: jax.random.randint(kk, (cfg.sample_size,), 0, m)
+            )(sample_keys)
+            samples = data[idx]  # (W, s, d)
+        with jaxhooks.named_scope("round.worker_round"):
+            new_c, new_obj, new_deg, keys2, accepted, iters = jax.vmap(
+                lambda c, o, dg, kk, bc, bd, sm: _worker_round(
+                    c, o, dg, kk, bc, bd, sm, cfg
+                )
+            )(
+                state.centroids,
+                state.best_obj,
+                state.degenerate,
+                next_keys,
+                base_c,
+                base_deg,
+                samples,
             )
-        )(
-            state.centroids,
-            state.best_obj,
-            state.degenerate,
-            next_keys,
-            base_c,
-            base_deg,
-            samples,
-        )
         new_state = WorkerState(new_c, new_obj, new_deg, keys2)
-        new_state = _cross_group_sync(new_state, r, cfg)
+        with jaxhooks.named_scope("round.cross_group_sync"):
+            new_state = _cross_group_sync(new_state, r, cfg)
         return new_state, RoundMetrics(
             new_state.best_obj, accepted, iters, quarantined
         )

@@ -28,6 +28,7 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.resilience import retry
 
 
@@ -91,8 +92,15 @@ def prefetch_iter(
     delays = retry.backoff_delays(policy, seed=seed)
     idle = 0.0
     while True:
+        # Per-iteration recorder lookup: tracing can be enabled mid-stream
+        # and a disabled loop must not hold a stale recorder alive.
+        rec = obs.get_recorder()
+        if rec is not None:
+            rec.gauge("pipeline.queue_depth", q.qsize())
         try:
-            item = q.get(timeout=poll_s)
+            with (rec.span("prefetch.wait") if rec is not None
+                  else obs.NULL_SPAN):
+                item = q.get(timeout=poll_s)
         except queue.Empty:
             if t.is_alive():
                 idle += poll_s
@@ -109,6 +117,14 @@ def prefetch_iter(
             return
         if isinstance(item, _ProducerFailure):
             restarts += 1
+            if rec is not None:
+                rec.inc("pipeline.restarts")
+                rec.event(
+                    "pipeline.producer_failure",
+                    error=type(item.exc).__name__,
+                    restarts=restarts,
+                    budget=max_restarts,
+                )
             if restarts > max_restarts:
                 raise PipelineError(
                     f"prefetch producer failed {restarts} time(s); "
@@ -117,6 +133,8 @@ def prefetch_iter(
             sleep(next(delays))
             t = start()
             continue
+        if rec is not None:
+            rec.inc("pipeline.items")
         yield item
 
 

@@ -10,6 +10,16 @@ The wrappers own all padding so the kernels can assume hardware-aligned
 tiles: S is padded with junk rows (sliced off), D with zero columns (no-op in
 dot products), K with +inf-norm centroids (can never win an argmin) /
 out-of-range assignments (fall outside every one-hot tile).
+
+Observability: each public wrapper opens a host-side ``kernel.*`` span when a
+``repro.obs`` recorder is active AND the call is a real dispatch (arguments
+are concrete, not tracers — inside an enclosing jit the wrapper runs at
+trace time, where host timing is meaningless). The jitted bodies carry
+``jax.named_scope`` labels so the regions survive into HLO metadata and XLA
+profiles regardless. Dispatch is asynchronous, so a kernel span measures
+dispatch cost unless the recorder was configured with ``sync_kernels=True``
+(then the span blocks on the result — true execution time, at the price of a
+pipeline bubble).
 """
 from __future__ import annotations
 
@@ -18,9 +28,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.assign import assign_pallas
 from repro.kernels.update import cluster_sums_pallas
+from repro.obs import jaxhooks
 
 Array = jax.Array
 
@@ -40,79 +52,138 @@ def _round_up(v: int, m: int) -> int:
     return v + (-v) % m
 
 
+def _traced_call(rec, name: str, attrs: dict, thunk):
+    """One host-side kernel span around a dispatch. The span covers dispatch
+    only (async) unless the recorder asks for ``sync_kernels`` — then it
+    blocks on the result and covers execution."""
+    with rec.span(name, **attrs), jaxhooks.trace_annotation(name):
+        out = thunk()
+        if rec.sync_kernels:
+            jax.block_until_ready(out)
+    return out
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
+def _assign_clusters_jit(x: Array, c: Array, *, impl: str | None = None) -> tuple[Array, Array]:
+    with jaxhooks.named_scope("kernel.assign"):
+        impl = resolve_impl(impl)
+        if impl == "ref":
+            return ref.assign_ref(x, c)
+        s, d = x.shape
+        k = c.shape[0]
+        bs = min(256, _round_up(s, _SUBLANE))
+        bk = min(128, _round_up(k, _LANE))
+        bd = min(512, _round_up(d, _LANE))
+        sp, kp, dp = _round_up(s, bs), _round_up(k, bk), _round_up(d, bd)
+        xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+        cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
+        idx, dist = assign_pallas(
+            xp, cp, k_valid=k, block_s=bs, block_k=bk, block_d=bd,
+            interpret=(impl == "interpret"),
+        )
+        return idx[:s], dist[:s]
+
+
 def assign_clusters(x: Array, c: Array, *, impl: str | None = None) -> tuple[Array, Array]:
     """Nearest-centroid assignment: x (s,d), c (k,d) -> (idx (s,), dist (s,))."""
-    impl = resolve_impl(impl)
-    if impl == "ref":
-        return ref.assign_ref(x, c)
-    s, d = x.shape
-    k = c.shape[0]
-    bs = min(256, _round_up(s, _SUBLANE))
-    bk = min(128, _round_up(k, _LANE))
-    bd = min(512, _round_up(d, _LANE))
-    sp, kp, dp = _round_up(s, bs), _round_up(k, bk), _round_up(d, bd)
-    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
-    cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
-    idx, dist = assign_pallas(
-        xp, cp, k_valid=k, block_s=bs, block_k=bk, block_d=bd,
-        interpret=(impl == "interpret"),
+    rec = obs.get_recorder()
+    if rec is None or not _is_concrete(x):
+        return _assign_clusters_jit(x, c, impl=impl)
+    return _traced_call(
+        rec, "kernel.assign", {"s": int(x.shape[0]), "k": int(c.shape[0])},
+        lambda: _assign_clusters_jit(x, c, impl=impl),
     )
-    return idx[:s], dist[:s]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl"))
+def _cluster_sums_jit(x: Array, idx: Array, k: int, *, impl: str | None = None) -> tuple[Array, Array]:
+    with jaxhooks.named_scope("kernel.update"):
+        impl = resolve_impl(impl)
+        if impl == "ref":
+            return ref.cluster_sums_ref(x, idx, k)
+        s, d = x.shape
+        bs = min(512, _round_up(s, _SUBLANE))
+        bd = min(512, _round_up(d, _LANE))
+        sp, dp = _round_up(s, bs), _round_up(d, bd)
+        kp = _round_up(k, min(128, _round_up(k, _LANE)))
+        # Padding rows get assignment kp (out of range of every tile).
+        idxp = jnp.pad(idx.astype(jnp.int32), (0, sp - s), constant_values=kp)
+        xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+        sums, counts = cluster_sums_pallas(
+            xp, idxp, k, block_s=bs, block_k=min(128, kp), block_d=bd,
+            interpret=(impl == "interpret"),
+        )
+        return sums[:, :d], counts
+
+
 def cluster_sums(x: Array, idx: Array, k: int, *, impl: str | None = None) -> tuple[Array, Array]:
     """Per-cluster sums (k,d) and counts (k,) from assignments idx (s,)."""
-    impl = resolve_impl(impl)
-    if impl == "ref":
-        return ref.cluster_sums_ref(x, idx, k)
-    s, d = x.shape
-    bs = min(512, _round_up(s, _SUBLANE))
-    bd = min(512, _round_up(d, _LANE))
-    sp, dp = _round_up(s, bs), _round_up(d, bd)
-    kp = _round_up(k, min(128, _round_up(k, _LANE)))
-    # Padding rows get assignment kp (out of range of every tile).
-    idxp = jnp.pad(idx.astype(jnp.int32), (0, sp - s), constant_values=kp)
-    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
-    sums, counts = cluster_sums_pallas(
-        xp, idxp, k, block_s=bs, block_k=min(128, kp), block_d=bd,
-        interpret=(impl == "interpret"),
+    rec = obs.get_recorder()
+    if rec is None or not _is_concrete(x):
+        return _cluster_sums_jit(x, idx, k, impl=impl)
+    return _traced_call(
+        rec, "kernel.update", {"s": int(x.shape[0]), "k": k},
+        lambda: _cluster_sums_jit(x, idx, k, impl=impl),
     )
-    return sums[:, :d], counts
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+def _mssc_objective_jit(x: Array, c: Array, *, impl: str | None = None) -> Array:
+    with jaxhooks.named_scope("kernel.objective"):
+        _, dist = assign_clusters(x, c, impl=impl)
+        return jnp.sum(dist)
+
+
 def mssc_objective(x: Array, c: Array, *, impl: str | None = None) -> Array:
     """Equation (1): sum of squared distances to nearest centroids."""
-    _, dist = assign_clusters(x, c, impl=impl)
-    return jnp.sum(dist)
+    rec = obs.get_recorder()
+    if rec is None or not _is_concrete(x):
+        return _mssc_objective_jit(x, c, impl=impl)
+    return _traced_call(
+        rec, "kernel.objective", {"s": int(x.shape[0]), "k": int(c.shape[0])},
+        lambda: _mssc_objective_jit(x, c, impl=impl),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+def _lloyd_pass_jit(x: Array, c: Array, *, impl: str | None = None):
+    with jaxhooks.named_scope("kernel.lloyd_pass"):
+        impl = resolve_impl(impl)
+        s, d = x.shape
+        k = c.shape[0]
+        if impl == "ref" or d > 4096:
+            idx, dist = assign_clusters(x, c, impl=impl)
+            sums, counts = cluster_sums(x, idx, k, impl=impl)
+            return idx, dist, sums, counts
+        from repro.kernels.lloyd import lloyd_pass_pallas
+
+        bs = min(256, _round_up(s, _SUBLANE))
+        bk = min(128, _round_up(k, _LANE))
+        dp = _round_up(d, _LANE)
+        sp, kp = _round_up(s, bs), _round_up(k, bk)
+        xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
+        cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
+        idx, dist, sums, counts = lloyd_pass_pallas(
+            xp, cp, k_valid=k, s_valid=s, block_s=bs, block_k=bk,
+            interpret=(impl == "interpret"),
+        )
+        return idx[:s], dist[:s], sums[:k, :d], counts[:k]
+
+
 def lloyd_pass(x: Array, c: Array, *, impl: str | None = None):
     """Fused Lloyd pass: (idx, dist, sums, counts) with ONE read of x.
 
     Falls back to assign+cluster_sums (two passes) on the ref path or when
     D exceeds the VMEM row-block budget.
     """
-    impl = resolve_impl(impl)
-    s, d = x.shape
-    k = c.shape[0]
-    if impl == "ref" or d > 4096:
-        idx, dist = assign_clusters(x, c, impl=impl)
-        sums, counts = cluster_sums(x, idx, k, impl=impl)
-        return idx, dist, sums, counts
-    from repro.kernels.lloyd import lloyd_pass_pallas
-
-    bs = min(256, _round_up(s, _SUBLANE))
-    bk = min(128, _round_up(k, _LANE))
-    dp = _round_up(d, _LANE)
-    sp, kp = _round_up(s, bs), _round_up(k, bk)
-    xp = jnp.pad(x, ((0, sp - s), (0, dp - d)))
-    cp = jnp.pad(c, ((0, kp - k), (0, dp - d)))
-    idx, dist, sums, counts = lloyd_pass_pallas(
-        xp, cp, k_valid=k, s_valid=s, block_s=bs, block_k=bk,
-        interpret=(impl == "interpret"),
+    rec = obs.get_recorder()
+    if rec is None or not _is_concrete(x):
+        return _lloyd_pass_jit(x, c, impl=impl)
+    return _traced_call(
+        rec, "kernel.lloyd_pass", {"s": int(x.shape[0]), "k": int(c.shape[0])},
+        lambda: _lloyd_pass_jit(x, c, impl=impl),
     )
-    return idx[:s], dist[:s], sums[:k, :d], counts[:k]

@@ -10,6 +10,7 @@ import functools
 import json
 import time
 
+from repro import obs
 from repro.core import HPClust, HPClustConfig
 from repro.core.hpclust import stream_from_generator
 from repro.data import blob_stream
@@ -48,11 +49,22 @@ def main(argv=None):
     ap.add_argument("--sharded", action="store_true",
                     help="run the shard_map SPMD engine over the local "
                          "devices (the production code path at host scale)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace to PATH (read with "
+                         "`python -m repro.obs summarize PATH`)")
     args = ap.parse_args(argv)
 
-    if args.sharded:
-        return _main_sharded(args)
+    if args.trace:
+        obs.configure(jsonl=args.trace)
+    try:
+        if args.sharded:
+            return _main_sharded(args)
+        return _main_stream(args)
+    finally:
+        obs.shutdown()
 
+
+def _main_stream(args):
     cfg = HPClustConfig(
         k=args.k, sample_size=args.sample, workers=args.workers,
         rounds=args.rounds, strategy=args.strategy,

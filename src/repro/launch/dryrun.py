@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs import ARCHS, get_config
 from repro.distributed import sharding as shd
 from repro.launch import steps as S
@@ -418,8 +419,20 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace to PATH (read with "
+                         "`python -m repro.obs summarize PATH`)")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs.configure(jsonl=args.trace)
+    try:
+        return _run_cells(args)
+    finally:
+        obs.shutdown()
+
+
+def _run_cells(args):
     out_dir = Path(args.out)
     hlo_dir = Path("experiments/hlo") if args.dump_hlo else None
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
@@ -445,21 +458,28 @@ def main(argv=None):
     for arch, shape, mp in cells:
         name = f"{arch} x {shape or '-'} x {'multi' if mp else 'single'}"
         try:
-            if arch == "hpclust-prod":
-                rec = run_hpclust_cell(multi_pod=mp, out_dir=out_dir)
-                run_hpclust_cell(multi_pod=mp, out_dir=out_dir, optimized=True)
-            elif arch == "hpclust-prod-opt":
-                rec = run_hpclust_cell(multi_pod=mp, out_dir=out_dir,
-                                       optimized=True)
-            else:
-                rec = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir,
-                               hlo_dir=hlo_dir)
+            with obs.span("dryrun.cell", arch=arch, shape=shape,
+                          mesh="multi" if mp else "single"):
+                if arch == "hpclust-prod":
+                    rec = run_hpclust_cell(multi_pod=mp, out_dir=out_dir)
+                    run_hpclust_cell(multi_pod=mp, out_dir=out_dir,
+                                     optimized=True)
+                elif arch == "hpclust-prod-opt":
+                    rec = run_hpclust_cell(multi_pod=mp, out_dir=out_dir,
+                                           optimized=True)
+                else:
+                    rec = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir,
+                                   hlo_dir=hlo_dir)
+            obs.inc("dryrun.cells_ok")
             print(f"OK   {name}: flops={rec['cost']['flops']:.3e} "
                   f"coll={rec['collective_bytes_total']:.3e}B "
                   f"compile={rec.get('compile_s', rec.get('lower_compile_s'))}s",
                   flush=True)
         except Exception as e:  # noqa: BLE001 — record and continue the sweep
             failures += 1
+            obs.inc("dryrun.cells_failed")
+            obs.event("dryrun.cell_failed", cell=name,
+                      error=type(e).__name__)
             print(f"FAIL {name}: {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(limit=3)
             out_dir.mkdir(parents=True, exist_ok=True)

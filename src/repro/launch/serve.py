@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import model as M
 from repro.serving import Request, ServeEngine
@@ -24,28 +25,40 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace to PATH (read with "
+                         "`python -m repro.obs summarize PATH`)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=True)
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    reqs = [
-        Request(rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-                max_tokens=args.max_tokens)
-        for i in range(args.requests)
-    ]
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
-    t0 = time.time()
-    eng.run(reqs)
-    dt = time.time() - t0
-    toks = sum(len(r.out) for r in reqs)
-    print(json.dumps({
-        "requests": len(reqs), "completed": sum(r.done for r in reqs),
-        "tokens": toks, "wall_s": round(dt, 2),
-        "tok_per_s": round(toks / max(dt, 1e-9), 1),
-    }, indent=1))
-    return 0
+    if args.trace:
+        obs.configure(jsonl=args.trace)
+    try:
+        cfg = get_config(args.arch, smoke=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        rng = np.random.default_rng(args.seed)
+        reqs = [
+            Request(rid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                    max_tokens=args.max_tokens)
+            for i in range(args.requests)
+        ]
+        eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
+        t0 = time.time()
+        done = eng.run(reqs)
+        dt = time.time() - t0
+        toks = sum(len(r.out) for r in reqs)
+        lats = [r.latency_s for r in done if r.latency_s is not None]
+        print(json.dumps({
+            "requests": len(reqs), "completed": sum(r.done for r in reqs),
+            "tokens": toks, "wall_s": round(dt, 2),
+            "tok_per_s": round(toks / max(dt, 1e-9), 1),
+            "latency_mean_s": round(sum(lats) / len(lats), 4) if lats else None,
+            "latency_max_s": round(max(lats), 4) if lats else None,
+        }, indent=1))
+        return 0
+    finally:
+        obs.shutdown()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import json
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.data import token_batches
 from repro.launch import steps as S
@@ -64,28 +65,37 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="checkpoints/train")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace to PATH (read with "
+                         "`python -m repro.obs summarize PATH`)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    step_fn = _jit_train_step(cfg, args.steps)
-    opt = step_fn.__wrapped__.optimizer
+    if args.trace:
+        obs.configure(jsonl=args.trace)
+    try:
+        cfg = get_config(args.arch, smoke=args.smoke)
+        step_fn = _jit_train_step(cfg, args.steps)
+        opt = step_fn.__wrapped__.optimizer
 
-    def init_state():
-        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-        return params, opt.init(params)
+        def init_state():
+            params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+            return params, opt.init(params)
 
-    trainer = Trainer(
-        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
-                      ckpt_dir=args.ckpt_dir),
-        step_fn, init_state, batches_for(cfg, args.batch, args.seq, args.seed),
-    )
-    result = trainer.run()
-    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
-    result["loss_first"] = losses[0] if losses else None
-    result["loss_last"] = losses[-1] if losses else None
-    result["loss_min"] = min(losses) if losses else None
-    print(json.dumps(result, indent=1))
-    return 0
+        trainer = Trainer(
+            TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir),
+            step_fn, init_state,
+            batches_for(cfg, args.batch, args.seq, args.seed),
+        )
+        result = trainer.run()
+        losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+        result["loss_first"] = losses[0] if losses else None
+        result["loss_last"] = losses[-1] if losses else None
+        result["loss_min"] = min(losses) if losses else None
+        print(json.dumps(result, indent=1))
+        return 0
+    finally:
+        obs.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,253 @@
+"""``python -m repro.obs`` — make a JSONL trace explainable after the fact.
+
+Subcommands:
+  summarize TRACE   span tree (total/self time, call counts), per-round
+                    objective descent, metric rollups with p50/p95/p99.
+  prom TRACE        last metrics snapshot in Prometheus text format.
+
+Exit codes: 0 ok, 1 empty or unparseable trace, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.obs.core import quantile
+
+
+def load_trace(path: str) -> tuple[list, list, dict]:
+    """Parse a JSONL trace into (spans, events, merged-last metrics)."""
+    spans: list[dict] = []
+    events: list[dict] = []
+    metrics: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: invalid JSON: {e}") from e
+            kind = rec.get("type")
+            if kind == "span":
+                spans.append(rec)
+            elif kind == "event":
+                events.append(rec)
+            elif kind == "metrics":
+                # Merge: later snapshots win per metric; histograms from
+                # different runs appended to one file keep the later one.
+                for fam in ("counters", "gauges", "histograms"):
+                    metrics[fam].update(rec.get(fam, {}))
+    return spans, events, metrics
+
+
+# ---------------------------------------------------------------------------
+# span tree
+# ---------------------------------------------------------------------------
+
+
+def _span_key(rec: dict, sid) -> tuple:
+    return (rec.get("run", ""), sid)
+
+
+def build_tree(spans: list[dict]):
+    """Returns (roots, children) keyed by (run, span_id)."""
+    by_id = {_span_key(s, s["span_id"]): s for s in spans}
+    children: dict[tuple, list] = defaultdict(list)
+    roots: list[dict] = []
+    for s in spans:
+        pid = s.get("parent_id")
+        pkey = _span_key(s, pid)
+        if pid is not None and pkey in by_id:
+            children[pkey].append(s)
+        else:
+            roots.append(s)
+    return roots, children
+
+
+def _aggregate(nodes: list[dict], children: dict) -> list[dict]:
+    """Group sibling spans by name: count, total, self, nested groups."""
+    groups: dict[str, dict] = {}
+    for s in nodes:
+        g = groups.setdefault(
+            s["name"], {"name": s["name"], "count": 0, "total": 0.0,
+                        "self": 0.0, "kids": []}
+        )
+        kids = children.get(_span_key(s, s["span_id"]), [])
+        g["count"] += 1
+        g["total"] += s["dur"]
+        g["self"] += s["dur"] - sum(k["dur"] for k in kids)
+        g["kids"].extend(kids)
+    out = []
+    for g in sorted(groups.values(), key=lambda g: -g["total"]):
+        g["children"] = _aggregate(g.pop("kids"), children)
+        out.append(g)
+    return out
+
+
+def _fmt_s(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:8.3f}s "
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:8.2f}ms"
+    return f"{seconds * 1e6:8.1f}us"
+
+
+def print_span_tree(spans: list[dict], out=sys.stdout) -> None:
+    roots, children = build_tree(spans)
+    print("span tree (total / self / count):", file=out)
+
+    def walk(groups: list[dict], depth: int) -> None:
+        for g in groups:
+            name = "  " * depth + g["name"]
+            print(
+                f"  {name:<44s} {_fmt_s(g['total'])} {_fmt_s(g['self'])}"
+                f"  x{g['count']}",
+                file=out,
+            )
+            walk(g["children"], depth + 1)
+
+    walk(_aggregate(roots, children), 0)
+
+
+# ---------------------------------------------------------------------------
+# rounds + metrics
+# ---------------------------------------------------------------------------
+
+
+def print_rounds(events: list[dict], out=sys.stdout, limit: int = 48) -> None:
+    rounds = [e for e in events if e["name"] == "hpclust.round"]
+    if not rounds:
+        return
+    print("per-round objective (hpclust.round events):", file=out)
+    shown = rounds if len(rounds) <= limit else rounds[:limit]
+    for e in shown:
+        a = e.get("attrs", {})
+        where = f"window {a['window']} " if a.get("window") is not None else ""
+        print(
+            f"  {where}round {a.get('round', '?'):>3}: "
+            f"best={a.get('best_obj', float('nan')):.6g} "
+            f"accepted={a.get('accepted', '?')} "
+            f"quarantined={a.get('quarantined', 0)}",
+            file=out,
+        )
+    if len(rounds) > limit:
+        print(f"  ... ({len(rounds) - limit} more rounds)", file=out)
+    objs = [e["attrs"]["best_obj"] for e in rounds
+            if "best_obj" in e.get("attrs", {})]
+    if objs:
+        finite = [o for o in objs if o == o and o != float("inf")]
+        monotone = all(b <= a * (1 + 1e-6) for a, b in zip(objs, objs[1:]))
+        print(
+            f"  descent: first={objs[0]:.6g} last={objs[-1]:.6g} "
+            f"best={min(finite):.6g} monotone={monotone}"
+            if finite else "  descent: no finite objectives",
+            file=out,
+        )
+
+
+def print_metrics(metrics: dict, out=sys.stdout) -> None:
+    if not any(metrics.values()):
+        return
+    print("metrics:", file=out)
+    for name, v in sorted(metrics["counters"].items()):
+        print(f"  counter    {name:<40s} {v:g}", file=out)
+    for name, v in sorted(metrics["gauges"].items()):
+        print(f"  gauge      {name:<40s} {v:g}", file=out)
+    for name, h in sorted(metrics["histograms"].items()):
+        values = sorted(h.get("values", []))
+        count = h.get("count", 0)
+        mean = (h.get("sum", 0.0) / count) if count else float("nan")
+        qtxt = ""
+        if values:
+            qtxt = (
+                f" p50={quantile(values, 0.5):.6g}"
+                f" p95={quantile(values, 0.95):.6g}"
+                f" p99={quantile(values, 0.99):.6g}"
+            )
+        print(
+            f"  histogram  {name:<40s} count={count} mean={mean:.6g}{qtxt}",
+            file=out,
+        )
+
+
+def print_events(events: list[dict], out=sys.stdout) -> None:
+    other = [e for e in events if e["name"] != "hpclust.round"]
+    if not other:
+        return
+    counts: dict[str, int] = defaultdict(int)
+    for e in other:
+        counts[e["name"]] += 1
+    print("events:", file=out)
+    for name, n in sorted(counts.items()):
+        print(f"  {name:<46s} x{n}", file=out)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def summarize(path: str, out=sys.stdout) -> int:
+    try:
+        spans, events, metrics = load_trace(path)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    if not spans and not events and not any(metrics.values()):
+        print(f"error: {path} holds no trace records", file=sys.stderr)
+        return 1
+    print(f"trace {path}: {len(spans)} span(s), {len(events)} event(s)",
+          file=out)
+    if spans:
+        print_span_tree(spans, out)
+    print_rounds(events, out)
+    print_metrics(metrics, out)
+    print_events(events, out)
+    return 0
+
+
+def prom(path: str, out=sys.stdout) -> int:
+    """Re-render the trace's last metrics snapshot as Prometheus text."""
+    from repro.obs.core import MetricRegistry
+
+    try:
+        _, _, metrics = load_trace(path)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    reg = MetricRegistry()
+    for name, v in metrics["counters"].items():
+        reg.counter(name).add(v)
+    for name, v in metrics["gauges"].items():
+        reg.gauge(name).set(v)
+    for name, h in metrics["histograms"].items():
+        hist = reg.histogram(name)
+        for v in h.get("values", []):
+            hist.observe(v)
+        # Preserve count/sum beyond the retained values.
+        hist.count = h.get("count", hist.count)
+        hist.total = h.get("sum", hist.total)
+    from repro.obs.sinks import prometheus_text
+
+    out.write(prometheus_text(reg))
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize a repro.obs JSONL trace.",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+    ps = sub.add_parser("summarize", help="span tree + metric rollups")
+    ps.add_argument("trace", help="JSONL trace file (from --trace)")
+    pp = sub.add_parser("prom", help="metrics snapshot as Prometheus text")
+    pp.add_argument("trace")
+    args = p.parse_args(argv)
+    if args.cmd == "summarize":
+        return summarize(args.trace)
+    return prom(args.trace)

@@ -1,0 +1,103 @@
+"""Trace sinks: JSONL event stream + Prometheus-style text snapshot.
+
+``JsonlSink`` is the durable format (one JSON object per line, consumed by
+``python -m repro.obs summarize``); ``ListSink`` keeps records in memory for
+tests; ``prometheus_text`` renders a registry snapshot in the Prometheus
+text exposition format for scrape-style export.
+"""
+from __future__ import annotations
+
+import json
+import re
+import threading
+from typing import IO, Optional
+
+from repro.obs.core import MetricRegistry, quantile
+
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+class ListSink:
+    """In-memory sink (tests, programmatic inspection)."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+        self._lock = threading.Lock()
+
+    def write(self, record: dict) -> None:
+        with self._lock:
+            self.records.append(record)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+def _json_default(o):
+    # Last-resort encoder so an odd attr (numpy scalar, Path) can't kill the
+    # trace mid-run; numeric-looking objects keep their value.
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return repr(o)
+
+
+class JsonlSink:
+    """Append-mode JSONL writer — successive traced CLIs accumulate into one
+    trace file; line-buffered so a crash loses at most the current record."""
+
+    def __init__(self, path: str, *, mode: str = "a"):
+        self.path = path
+        self._fh: Optional[IO[str]] = open(path, mode, buffering=1)
+        self._lock = threading.Lock()
+
+    def write(self, record: dict) -> None:
+        line = json.dumps(record, separators=(",", ":"), default=_json_default)
+        with self._lock:
+            if self._fh is not None:
+                self._fh.write(line + "\n")
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+def _prom_name(name: str) -> str:
+    return "repro_" + _PROM_BAD.sub("_", name)
+
+
+def prometheus_text(registry: MetricRegistry) -> str:
+    """Render a metrics snapshot in the Prometheus text format.
+
+    Histograms export ``_count``/``_sum`` plus nearest-rank quantile gauges
+    (summary-style) computed from the retained observations.
+    """
+    snap = registry.snapshot()
+    lines: list[str] = []
+    for name, v in sorted(snap["counters"].items()):
+        p = _prom_name(name)
+        lines += [f"# TYPE {p} counter", f"{p} {v:g}"]
+    for name, v in sorted(snap["gauges"].items()):
+        p = _prom_name(name)
+        lines += [f"# TYPE {p} gauge", f"{p} {v:g}"]
+    for name, h in sorted(snap["histograms"].items()):
+        p = _prom_name(name)
+        lines += [
+            f"# TYPE {p} summary",
+            f"{p}_count {h['count']}",
+            f"{p}_sum {h['sum']:g}",
+        ]
+        values = sorted(h["values"])
+        if values:
+            for q in (0.5, 0.95, 0.99):
+                lines.append(f'{p}{{quantile="{q}"}} {quantile(values, q):g}')
+    return "\n".join(lines) + "\n"

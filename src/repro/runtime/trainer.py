@@ -29,6 +29,7 @@ from typing import Any, Callable, Iterator
 
 import jax
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.resilience.preemption import PreemptionGuard
 
@@ -108,6 +109,9 @@ class Trainer:
                         raise
                     self._log({"event": "restart", "restarts": restarts,
                                "error": str(e)})
+                    obs.event("train.restart", restarts=restarts,
+                              error=str(e))
+                    obs.inc("train.restarts")
         finally:
             self.guard.restore()
 
@@ -122,18 +126,23 @@ class Trainer:
                 if step > 0:
                     self.ckpt.save(step - 1, (params, opt_state))
                 self._log({"event": "preempted", "step": step})
+                obs.event("resilience.preempted", step=step)
                 return {"status": "preempted", "step": step,
                         "restarts": restarts}
             if step in self.failure_at:
                 self.failure_at.discard(step)
                 raise StepFailure(f"injected failure at step {step}")
             batch = next(self.data)
-            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            with obs.span("train.step", step=step):
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
             if step % self.cfg.ckpt_every == 0:
-                self.ckpt.save(step, (params, opt_state),
-                               block=not self.cfg.async_save)
+                with obs.span("ckpt.save", step=step):
+                    self.ckpt.save(step, (params, opt_state),
+                                   block=not self.cfg.async_save)
             self._log({"step": step,
                        **{k: float(v) for k, v in metrics.items()}})
+            obs.inc("train.steps")
             step += 1
         self.ckpt.wait()
         self.ckpt.save(self.cfg.total_steps - 1, (params, opt_state))

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model as M
 from repro.models.common import ModelConfig
 
@@ -40,6 +41,8 @@ class Request:
     done: bool = False
     timed_out: bool = False
     submitted_at: float | None = None  # set by ServeEngine.submit
+    finished_at: float | None = None   # set by ServeEngine._finish
+    latency_s: float | None = None     # enqueue -> completion (engine clock)
 
 
 @functools.lru_cache(maxsize=None)
@@ -84,6 +87,7 @@ class ServeEngine:
             )
         req.submitted_at = self.clock()
         self.queue.append(req)
+        obs.gauge("serve.queue_depth", len(self.queue))
 
     def _expired(self, req: Request) -> bool:
         return (
@@ -95,7 +99,15 @@ class ServeEngine:
     def _finish(self, req: Request, *, timed_out: bool = False) -> None:
         req.done = True
         req.timed_out = timed_out
+        req.finished_at = self.clock()
+        if req.submitted_at is not None:
+            req.latency_s = req.finished_at - req.submitted_at
         self._finished.append(req)
+        rec = obs.get_recorder()
+        if rec is not None:
+            rec.inc("serve.timed_out" if timed_out else "serve.completed")
+            if req.latency_s is not None:
+                rec.observe("serve.request_latency_s", req.latency_s)
 
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.active):
@@ -105,6 +117,11 @@ class ServeEngine:
 
     def _insert(self, slot: int, req: Request) -> None:
         """Prefill a single request and copy its cache into the slot."""
+        with obs.span("serve.prefill", rid=req.rid, slot=slot,
+                      prompt_len=len(req.prompt)):
+            self._insert_inner(slot, req)
+
+    def _insert_inner(self, slot: int, req: Request) -> None:
         batch = {"tokens": jnp.asarray(req.prompt[None, :])}
         logits, cache1 = self._prefill(self.params, batch)
         s = len(req.prompt)
@@ -141,12 +158,19 @@ class ServeEngine:
                 break
             self._insert(slot, self.queue.pop(0))
             n += 1
+        if n:
+            obs.gauge("serve.queue_depth", len(self.queue))
         return n
 
     # -- decode ----------------------------------------------------------------
 
     def step(self) -> int:
         """One decode step for all active slots. Returns #finished."""
+        with obs.span("serve.decode",
+                      active=sum(r is not None for r in self.active)):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
         finished = 0
         for i, r in enumerate(self.active):
             if r is not None and self._expired(r):
@@ -184,20 +208,22 @@ class ServeEngine:
     def run(self, requests: list[Request], *, max_steps: int = 1000) -> list[Request]:
         """Drive submitted requests to completion; returns them in the order
         they finished (completed or timed out)."""
-        for r in requests:
-            self.submit(r)
-        done: list[Request] = []
-        steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
-            self.admit()
-            self.step()
-            # Completion order comes from the engine's _finished log — an
-            # O(done) drain, not an O(n^2) rescan of every request per step.
+        with obs.span("serve.run", requests=len(requests)):
+            for r in requests:
+                self.submit(r)
+            done: list[Request] = []
+            steps = 0
+            while (self.queue or any(self.active)) and steps < max_steps:
+                self.admit()
+                self.step()
+                # Completion order comes from the engine's _finished log — an
+                # O(done) drain, not an O(n^2) rescan of every request per
+                # step.
+                if self._finished:
+                    done.extend(self._finished)
+                    self._finished.clear()
+                steps += 1
             if self._finished:
                 done.extend(self._finished)
                 self._finished.clear()
-            steps += 1
-        if self._finished:
-            done.extend(self._finished)
-            self._finished.clear()
-        return done
+            return done

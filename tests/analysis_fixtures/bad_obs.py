@@ -1,0 +1,18 @@
+"""Known-bad library-side printing for the OB check family.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+``# F:<CODE>`` tags mark the exact line each finding must anchor to.
+"""
+import sys
+
+
+def hot_loop(windows):
+    for i, w in enumerate(windows):
+        print(f"window {i}: rows={len(w)}")  # F:OB001
+        yield w
+
+
+def report(stats):
+    print("done", stats)  # F:OB001
+    # Deliberate diagnostics to stderr stay allowed:
+    print("warning: sanitized rows", file=sys.stderr)

@@ -31,7 +31,7 @@ def expected_findings(path: Path) -> set[tuple[str, int]]:
 
 
 @pytest.mark.parametrize(
-    "name", ["bad_pallas.py", "bad_jit.py", "bad_dtype.py"]
+    "name", ["bad_pallas.py", "bad_jit.py", "bad_dtype.py", "bad_obs.py"]
 )
 def test_fixture_findings_exact(name):
     """Each tagged line yields exactly its finding — code, file and line —
@@ -46,7 +46,7 @@ def test_fixture_findings_exact(name):
 
 
 def test_fixture_covers_every_check():
-    """The three fixtures jointly exercise every registered check code."""
+    """The bad_* fixtures jointly exercise every registered check code."""
     tagged = set()
     for p in FIXTURES.glob("bad_*.py"):
         tagged |= {code for code, _ in expected_findings(p)}
@@ -66,6 +66,25 @@ def test_select_filters_by_prefix():
     assert {f.code for f in findings} == {"PK002"}
     with pytest.raises(KeyError):
         select_checks(["ZZ"])
+
+
+@pytest.mark.parametrize(
+    "path",
+    [
+        "src/repro/launch/cluster.py",
+        "src/repro/obs/cli.py",
+        "src/repro/obs/__main__.py",
+        "benchmarks/run.py",
+    ],
+)
+def test_ob001_exempts_cli_and_benchmark_paths(path):
+    findings = analyze_source('print("hello")\n', path=path)
+    assert findings == [], [f"{f.code}@{f.line}" for f in findings]
+
+
+def test_ob001_fires_in_library_paths():
+    findings = analyze_source('print("hello")\n', path="src/repro/core/x.py")
+    assert {f.code for f in findings} == {"OB001"}
 
 
 def test_vmem_estimate_details_in_message():

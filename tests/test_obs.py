@@ -1,0 +1,339 @@
+"""repro.obs: zero-overhead no-op mode, span nesting, metric thread-safety,
+JSONL round-trip through the CLI summarizer, and traced-fit integration."""
+import io
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import cli as obs_cli
+
+
+@pytest.fixture
+def recorder():
+    """Fresh Recorder + ListSink with a deterministic clock; always restores
+    whatever recorder was installed before the test."""
+    sink = obs.ListSink()
+    ticks = iter(float(i) for i in range(10_000))
+    rec = obs.Recorder((sink,), clock=lambda: next(ticks))
+    prev = obs.set_recorder(rec)
+    yield rec, sink
+    obs.set_recorder(prev)
+
+
+def spans_of(sink):
+    return [r for r in sink.records if r["type"] == "span"]
+
+
+# ---------------------------------------------------------------------------
+# no-op mode
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_mode_returns_null_span_singleton():
+    prev = obs.set_recorder(None)
+    try:
+        assert obs.get_recorder() is None
+        assert not obs.enabled()
+        # Identity, not just type: the disabled path must allocate nothing.
+        s1 = obs.span("hot.loop", i=0)
+        s2 = obs.span("hot.loop", i=1)
+        assert s1 is obs.NULL_SPAN and s2 is obs.NULL_SPAN
+        with s1 as inner:
+            assert inner is obs.NULL_SPAN
+            assert inner.set(rows=5) is obs.NULL_SPAN
+        # Metric/event helpers are silent no-ops.
+        obs.inc("c")
+        obs.gauge("g", 1.0)
+        obs.observe("h", 0.5)
+        obs.event("e", a=1)
+        obs.flush()
+    finally:
+        obs.set_recorder(prev)
+
+
+def test_shutdown_without_recorder_is_safe():
+    prev = obs.set_recorder(None)
+    try:
+        obs.shutdown()
+    finally:
+        obs.set_recorder(prev)
+
+
+# ---------------------------------------------------------------------------
+# span semantics
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_parent_ids_and_durations(recorder):
+    rec, sink = recorder
+    with obs.span("outer") as outer:
+        with obs.span("inner"):
+            pass
+        outer.set(note="x")
+    spans = spans_of(sink)
+    # Children close (and emit) before parents.
+    assert [s["name"] for s in spans] == ["inner", "outer"]
+    inner, outer_rec = spans
+    assert outer_rec["parent_id"] is None
+    assert inner["parent_id"] == outer_rec["span_id"]
+    assert inner["run"] == outer_rec["run"] == rec.run
+    # Fake clock ticks once per enter/exit: inner dur 1 tick, outer 3.
+    assert inner["dur"] == 1.0
+    assert outer_rec["dur"] == 3.0
+    assert outer_rec["attrs"] == {"note": "x"}
+
+
+def test_span_records_error_attr_and_propagates(recorder):
+    _, sink = recorder
+    with pytest.raises(ValueError):
+        with obs.span("failing"):
+            raise ValueError("boom")
+    (span,) = spans_of(sink)
+    assert span["attrs"]["error"] == "ValueError"
+
+
+def test_span_stacks_are_thread_local(recorder):
+    rec, sink = recorder
+    rec.clock = __import__("time").monotonic  # real clock: threads interleave
+    barrier = threading.Barrier(2)
+
+    def worker(name):
+        with rec.span(name):
+            barrier.wait(timeout=5)
+
+    threads = [threading.Thread(target=worker, args=(f"w{i}",)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spans = spans_of(sink)
+    assert len(spans) == 2
+    # Concurrent sibling spans on different threads are both roots.
+    assert all(s["parent_id"] is None for s in spans)
+    assert {s["thread"] for s in spans} != {spans[0]["thread"]} or \
+        spans[0]["thread"] != spans[1]["thread"]
+
+
+def test_distinct_recorders_have_distinct_run_tokens():
+    a, b = obs.Recorder(()), obs.Recorder(())
+    assert a.run != b.run
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metric_registry_thread_safety():
+    reg = obs.MetricRegistry()
+    n_threads, n_iters = 8, 500
+
+    def worker(i):
+        for j in range(n_iters):
+            reg.counter("c").add(1)
+            reg.gauge("g").set(i)
+            reg.histogram("h").observe(j)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == n_threads * n_iters
+    assert snap["histograms"]["h"]["count"] == n_threads * n_iters
+    assert 0 <= snap["gauges"]["g"] < n_threads
+
+
+def test_metric_kind_mismatch_raises():
+    reg = obs.MetricRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_histogram_caps_values_but_not_count():
+    from repro.obs import core as obs_core
+
+    h = obs.Histogram("h")
+    n = obs_core._VALUES_CAP + 100
+    for i in range(n):
+        h.observe(float(i))
+    snap = h.snapshot()
+    assert snap["count"] == n
+    assert snap["max"] == float(n - 1)
+    assert len(snap["values"]) == obs_core._VALUES_CAP
+
+
+def test_quantile_nearest_rank():
+    vals = [float(i) for i in range(1, 101)]
+    assert obs.quantile(vals, 0.0) == 1.0
+    assert obs.quantile(vals, 1.0) == 100.0
+    assert obs.quantile(vals, 0.5) == 51.0  # nearest rank on 0..99 index grid
+    with pytest.raises(ValueError):
+        obs.quantile([], 0.5)
+
+
+def test_prometheus_text_renders_all_kinds():
+    reg = obs.MetricRegistry()
+    reg.counter("stream.windows").add(3)
+    reg.gauge("pipeline.queue_depth").set(2)
+    for v in (0.1, 0.2, 0.3):
+        reg.histogram("serve.request_latency_s").observe(v)
+    text = obs.prometheus_text(reg)
+    assert "# TYPE repro_stream_windows counter" in text
+    assert "repro_stream_windows 3" in text
+    assert "repro_pipeline_queue_depth 2" in text
+    assert 'repro_serve_request_latency_s{quantile="0.5"} 0.2' in text
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip through the summarizer
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_roundtrip_through_summarizer(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    rec = obs.Recorder((obs.JsonlSink(path),))
+    prev = obs.set_recorder(rec)
+    try:
+        with obs.span("stream.window", window=0):
+            with obs.span("hpclust.rounds"):
+                obs.event("hpclust.round", round=0, best_obj=10.0,
+                          accepted="2/2", quarantined=0)
+                obs.event("hpclust.round", round=1, best_obj=8.0,
+                          accepted="1/2", quarantined=0)
+        obs.inc("stream.windows")
+        obs.observe("serve.request_latency_s", 0.25)
+    finally:
+        obs.set_recorder(prev)
+        rec.close()
+
+    spans, events, metrics = obs_cli.load_trace(path)
+    assert [s["name"] for s in spans] == ["hpclust.rounds", "stream.window"]
+    assert len(events) == 2
+    assert metrics["counters"]["stream.windows"] == 1
+
+    out = io.StringIO()
+    assert obs_cli.summarize(path, out=out) == 0
+    text = out.getvalue()
+    assert "stream.window" in text
+    assert "hpclust.rounds" in text
+    assert "best=10" in text and "best=8" in text
+    assert "monotone=True" in text
+    assert "serve.request_latency_s" in text
+
+    out = io.StringIO()
+    assert obs_cli.prom(path, out=out) == 0
+    assert "repro_stream_windows 1" in out.getvalue()
+
+
+def test_appended_traces_do_not_cross_link(tmp_path):
+    """Two CLI invocations append to one file; span ids restart per run but
+    the run token keeps the trees separate."""
+    path = str(tmp_path / "trace.jsonl")
+    for _ in range(2):
+        rec = obs.Recorder((obs.JsonlSink(path),))
+        with rec.span("root"):
+            with rec.span("child"):
+                pass
+        rec.close()
+    spans, _, _ = obs_cli.load_trace(path)
+    roots, children = obs_cli.build_tree(spans)
+    assert len(roots) == 2
+    assert all(len(v) == 1 for v in children.values())
+
+
+def test_summarizer_exit_codes(tmp_path):
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert obs_cli.summarize(str(empty), out=io.StringIO()) == 1
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("{not json\n")
+    assert obs_cli.summarize(str(bad), out=io.StringIO()) == 1
+    assert obs_cli.main(["summarize", str(empty)]) == 1
+
+
+def test_jsonl_sink_survives_unserializable_attrs(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    sink = obs.JsonlSink(path)
+    sink.write({"type": "event", "name": "e", "ts": 0.0, "run": "r",
+                "attrs": {"odd": np.float32(1.5), "obj": object()}})
+    sink.close()
+    (line,) = open(path).read().splitlines()
+    rec = json.loads(line)
+    assert rec["attrs"]["odd"] == 1.5
+    assert isinstance(rec["attrs"]["obj"], str)
+
+
+# ---------------------------------------------------------------------------
+# integration: traced fit / fit_stream
+# ---------------------------------------------------------------------------
+
+
+def test_traced_fit_stream_emits_expected_spans_and_metrics(recorder):
+    from repro.core import HPClust, HPClustConfig
+
+    rec, sink = recorder
+    rec.clock = __import__("time").monotonic
+    x = np.random.default_rng(0).normal(size=(256, 4)).astype(np.float32)
+    est = HPClust(HPClustConfig(k=3, sample_size=64, workers=2, rounds=2))
+    res = est.fit_stream([x, x])
+    assert res.stats.windows == 2
+    names = {s["name"] for s in spans_of(sink)}
+    assert {"stream.window", "hpclust.rounds", "sanitize.window"} <= names
+    rounds = [r for r in sink.records
+              if r["type"] == "event" and r["name"] == "hpclust.round"]
+    assert len(rounds) == 4  # 2 windows x 2 rounds
+    assert rec.metrics.counter("stream.windows").snapshot() == 2
+    assert rec.metrics.counter("stream.rows").snapshot() == 512
+
+
+def test_fit_unperturbed_when_tracing_disabled():
+    """Tracing off: fit produces the identical result (and no records)."""
+    from repro.core import HPClust, HPClustConfig
+
+    x = np.random.default_rng(1).normal(size=(256, 4)).astype(np.float32)
+    est = HPClust(HPClustConfig(k=3, sample_size=64, workers=2, rounds=2))
+    base = est.fit(x)
+
+    sink = obs.ListSink()
+    prev = obs.set_recorder(obs.Recorder((sink,)))
+    try:
+        traced = est.fit(x)
+    finally:
+        obs.set_recorder(prev)
+    assert traced.objective == base.objective
+    np.testing.assert_array_equal(traced.centroids, base.centroids)
+    assert any(s["name"] == "hpclust.fit" for s in spans_of(sink))
+
+
+def test_serving_latency_recorded_without_obs():
+    """Satellite: Request latency fields are set by the engine clock even
+    when no recorder is installed."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving import Request, ServeEngine
+
+    prev = obs.set_recorder(None)
+    try:
+        cfg = get_config("qwen3-0.6b", smoke=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                        max_tokens=2)
+                for i in range(2)]
+        eng = ServeEngine(cfg, params, slots=2, max_len=64)
+        done = eng.run(reqs)
+    finally:
+        obs.set_recorder(prev)
+    assert len(done) == 2
+    for r in done:
+        assert r.finished_at is not None
+        assert r.latency_s is not None and r.latency_s >= 0.0
