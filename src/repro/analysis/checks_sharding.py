@@ -1,0 +1,157 @@
+"""SH: sharding-spec hygiene for NamedSharding / shard_map call sites.
+
+A ``PartitionSpec`` names mesh axes by string; nothing in jax checks the
+names until the array (or the shard_map trace) actually touches the mesh,
+and on some paths a typo silently replicates instead of sharding — the
+program runs, just 16x slower and with a device-memory footprint that only
+blows up at scale. The check cross-references every axis-name literal in a
+spec against the axis names of the mesh the same call site consumes.
+
+Resolution is deliberately conservative (astutils philosophy: never guess):
+the mesh must resolve — directly or through one local assignment — to a
+``jax.make_mesh(shape, axis_names)`` / ``Mesh(devices, axis_names)`` call
+with a *literal* tuple of axis names, and only string literals inside
+``P(...)`` / ``PartitionSpec(...)`` are checked. Meshes built by helper
+functions (``make_host_mesh()``) or passed as parameters are unknown and
+skipped.
+
+Codes:
+  SH001  PartitionSpec axis name absent from the consuming mesh
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis import astutils as au
+from repro.analysis.core import ModuleContext, register
+
+_MESH_CTORS = ("make_mesh", "Mesh", "AbstractMesh")
+_SPEC_CTORS = ("P", "PartitionSpec")
+
+
+def _literal_axis_names(node: ast.AST) -> Optional[tuple[str, ...]]:
+    """('data', 'model') / ['data'] / 'data' -> axis-name tuple, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        names = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.append(e.value)
+            else:
+                return None
+        return tuple(names)
+    return None
+
+
+def _mesh_axes_from_call(call: ast.Call) -> Optional[tuple[str, ...]]:
+    """Axis names of a literal mesh constructor call, else None."""
+    name = au.call_name(call)
+    if name is None or name.split(".")[-1] not in _MESH_CTORS:
+        return None
+    arg = au.get_kwarg(call, "axis_names")
+    if arg is None and len(call.args) >= 2:
+        arg = call.args[1]
+    return _literal_axis_names(arg) if arg is not None else None
+
+
+def _assignment_env(tree: ast.Module) -> dict[str, ast.expr]:
+    """name -> value node for every single-target assignment (last wins)."""
+    env: dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                env[tgt.id] = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name):
+                env[node.target.id] = node.value
+    return env
+
+
+def _resolve(node: ast.AST, env: dict[str, ast.expr]) -> ast.AST:
+    """Follow one Name -> assignment hop (no recursion: stays conservative)."""
+    if isinstance(node, ast.Name) and node.id in env:
+        return env[node.id]
+    return node
+
+
+def _resolve_mesh_axes(
+    node: ast.AST, env: dict[str, ast.expr]
+) -> Optional[tuple[str, ...]]:
+    node = _resolve(node, env)
+    if isinstance(node, ast.Call):
+        return _mesh_axes_from_call(node)
+    return None
+
+
+def _spec_axis_literals(node: ast.AST, env: dict[str, ast.expr]):
+    """Yield (axis-name, anchor-node) for every string literal inside a
+    P(...)/PartitionSpec(...) call reachable from ``node``."""
+    node = _resolve(node, env)
+    for sub in ast.walk(node if isinstance(node, ast.AST) else ast.Module()):
+        if not isinstance(sub, ast.Call):
+            continue
+        name = au.call_name(sub)
+        if name is None or name.split(".")[-1] not in _SPEC_CTORS:
+            continue
+        for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                yield arg.value, arg
+            elif isinstance(arg, (ast.Tuple, ast.List)):
+                for e in arg.elts:
+                    if isinstance(e, ast.Constant) and isinstance(
+                            e.value, str):
+                        yield e.value, e
+
+
+@register(
+    "SH001",
+    "spec-axis-not-in-mesh",
+    "PartitionSpec axis names must exist in the mesh consumed by the same "
+    "NamedSharding/shard_map call site — a typo silently replicates the "
+    "array instead of sharding it.",
+)
+def check_spec_axes_exist(ctx: ModuleContext):
+    env = _assignment_env(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = au.call_name(node)
+        base = name.split(".")[-1] if name else None
+        if base == "NamedSharding":
+            mesh_arg = au.get_kwarg(node, "mesh")
+            if mesh_arg is None and node.args:
+                mesh_arg = node.args[0]
+            spec_args = []
+            spec_kw = au.get_kwarg(node, "spec")
+            if spec_kw is not None:
+                spec_args.append(spec_kw)
+            elif len(node.args) >= 2:
+                spec_args.append(node.args[1])
+        elif base == "shard_map":
+            mesh_arg = au.get_kwarg(node, "mesh")
+            if mesh_arg is None and len(node.args) >= 2:
+                mesh_arg = node.args[1]
+            spec_args = [
+                a for a in (
+                    au.get_kwarg(node, "in_specs"),
+                    au.get_kwarg(node, "out_specs"),
+                ) if a is not None
+            ]
+        else:
+            continue
+        if mesh_arg is None or not spec_args:
+            continue
+        axes = _resolve_mesh_axes(mesh_arg, env)
+        if axes is None:
+            continue  # mesh not statically resolvable — never guess
+        for spec_arg in spec_args:
+            for axis, anchor in _spec_axis_literals(spec_arg, env):
+                if axis not in axes:
+                    yield ctx.finding(
+                        "SH001", anchor,
+                        f"PartitionSpec names axis {axis!r} but the "
+                        f"consuming mesh only has axes {tuple(axes)!r}",
+                    )

@@ -147,6 +147,7 @@ def _load_builtin_checks() -> None:
         checks_jit,
         checks_obs,
         checks_pallas,
+        checks_sharding,
     )
 
 

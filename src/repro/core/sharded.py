@@ -32,6 +32,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -43,36 +44,49 @@ _INT_MAX = jnp.iinfo(jnp.int32).max
 
 
 class ShardedState(NamedTuple):
-    """Worker incumbents, leading axis = workers (sharded over worker axes)."""
+    """Worker incumbents, leading axis = workers (sharded over worker axes).
 
-    centroids: Array   # (W, k, d) f32
-    best_obj: Array    # (W,) f32
-    degenerate: Array  # (W, k) bool
+    Beyond the incumbents themselves the state carries everything a restart
+    needs (the elastic/resumable contract, mirroring the single-host
+    ``WorkerState``):
+
+      * ``key`` — per-worker-group PRNG keys. Round keys derive as
+        ``fold_in(key_w, rounds_done + r)``, so a run restored from a
+        checkpoint replays the exact sample draws the uninterrupted run
+        would have made (bit-for-bit on the same mesh).
+      * ``alive`` — host-controlled liveness mask. A dead worker group is
+        frozen: it never accepts a round result, contributes ``+inf`` to
+        every cooperative/hybrid2 selection, and never receives the global
+        best. The launcher flips this for quarantined groups on a degraded
+        mesh (see ``repro.launch.elastic``).
+      * ``rounds_done`` — global round counter (scalar), the PRNG offset.
+    """
+
+    centroids: Array    # (W, k, d) f32
+    best_obj: Array     # (W,) f32
+    degenerate: Array   # (W, k) bool
+    key: Array          # (W, 2) uint32 per-worker-group PRNG
+    alive: Array        # (W,) bool liveness mask
+    rounds_done: Array  # () int32 global round counter
 
 
 # ---------------------------------------------------------------------------
 # collective helpers (all run *inside* shard_map)
 # ---------------------------------------------------------------------------
 
-def _worker_index(worker_axes: tuple[str, ...]) -> Array:
-    """Flat index of this device's worker group along the worker axes."""
-    idx = jnp.int32(0)
-    for ax in worker_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-    return idx
-
-
-def _owner_mask(value: Array, axes, *, select_min: bool) -> Array:
+def _owner_mask(value: Array, axes, sizes: dict, *, select_min: bool) -> Array:
     """Boolean: is this device('s group) the unique arg-extremum over axes?
 
-    Ties broken towards the lowest flat axis index, so exactly one group wins.
+    Ties broken towards the lowest flat axis index, so exactly one group
+    wins. ``sizes`` carries the static mesh axis sizes (older jax has no
+    ``lax.axis_size``; the mesh is static anyway).
     """
     best = jax.lax.pmin(value, axes) if select_min else jax.lax.pmax(value, axes)
     cand = value <= best if select_min else value >= best
     idx = jnp.int32(0)
     axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
     for ax in axes_t:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * sizes[ax] + jax.lax.axis_index(ax)
     owner_idx = jax.lax.pmin(jnp.where(cand, idx, _INT_MAX), axes)
     return cand & (idx == owner_idx)
 
@@ -92,7 +106,9 @@ def _broadcast_from_owner(tree, owner: Array, axes):
     )
 
 
-def _global_categorical_row(key: Array, weights: Array, x: Array, axis: str):
+def _global_categorical_row(
+    key: Array, weights: Array, x: Array, axis: str, sizes: dict
+):
     """One global categorical draw (prob ∝ weights) over rows sharded on
     ``axis``; returns the winning row of x. Gumbel-max: global argmax of
     log w + Gumbel noise is an exact categorical sample."""
@@ -100,7 +116,7 @@ def _global_categorical_row(key: Array, weights: Array, x: Array, axis: str):
     val = jnp.log(jnp.maximum(weights, 1e-30)) + g
     lmax = jnp.max(val)
     larg = jnp.argmax(val)
-    owner = _owner_mask(lmax, axis, select_min=False)
+    owner = _owner_mask(lmax, axis, sizes, select_min=False)
     row = jnp.where(owner, x[larg], jnp.zeros_like(x[larg]))
     return jax.lax.psum(row, axis)
 
@@ -115,7 +131,8 @@ def _sq_dists_to_point(x: Array, p: Array) -> Array:
 
 
 def _reseed_degenerate_sharded(
-    key: Array, x: Array, c: Array, mask: Array, cfg: HPClustConfig, inner_axis: str
+    key: Array, x: Array, c: Array, mask: Array, cfg: HPClustConfig,
+    inner_axis: str, sizes: dict,
 ) -> Array:
     """reseed_degenerate with x sharded over inner_axis (global D^2 draws)."""
     xf = x.astype(jnp.float32)
@@ -139,7 +156,8 @@ def _reseed_degenerate_sharded(
         cand_keys = jax.random.split(kj, cfg.n_candidates)
         cands = jnp.stack(
             [
-                _global_categorical_row(cand_keys[l], mind, xf, inner_axis)
+                _global_categorical_row(
+                    cand_keys[l], mind, xf, inner_axis, sizes)
                 for l in range(cfg.n_candidates)
             ]
         )  # (L, d)
@@ -217,27 +235,30 @@ def _lloyd_sharded(
 # ---------------------------------------------------------------------------
 
 def _rounds_body(
-    key: Array,
     centroids: Array,   # (1, k, d) local worker shard
     best_obj: Array,    # (1,)
     degenerate: Array,  # (1, k)
+    keys: Array,        # (1, 2) this worker group's PRNG key
+    alive: Array,       # (1,) liveness mask
+    rounds_done: Array, # () global round counter (replicated)
     reservoir: Array,   # (1, m_shard, d) local slice of this worker's reservoir
     *,
     cfg: HPClustConfig,
     worker_axes: tuple[str, ...],
     inner_axis: str,
     pod_axis: str | None,
+    sizes: dict,
 ):
     c = centroids[0]
     obj = best_obj[0]
     deg = degenerate[0]
+    key = keys[0]
+    live = alive[0]
     res = reservoir[0]
     m_shard = res.shape[0]
-    s_loc = max(1, cfg.sample_size // jax.lax.axis_size(inner_axis))
+    s_loc = max(1, cfg.sample_size // sizes[inner_axis])
 
-    widx = _worker_index(worker_axes)
     iidx = jax.lax.axis_index(inner_axis)
-    base_key = jax.random.fold_in(key, widx)
 
     intra_axes: tuple[str, ...] = tuple(a for a in worker_axes if a != pod_axis)
     all_axes = worker_axes
@@ -245,8 +266,10 @@ def _rounds_body(
     def coop_best(c, obj, deg, axes):
         # Poisoned incumbents (NaN/-inf) must never own the broadcast: mask
         # to +inf before the pmin/owner selection (mirrors strategies.py).
-        obj = jnp.where(jnp.isfinite(obj), obj, jnp.inf)
-        owner = _owner_mask(obj, axes, select_min=True)
+        # Dead worker groups (liveness mask) contribute +inf too, so a
+        # quarantined group's stale incumbent can never warm-start anyone.
+        obj = jnp.where(live & jnp.isfinite(obj), obj, jnp.inf)
+        owner = _owner_mask(obj, axes, sizes, select_min=True)
         best_c, best_deg = _broadcast_from_owner((c, deg.astype(jnp.float32)), owner, axes)
         return best_c, jax.lax.pmin(obj, axes), best_deg > 0.5
 
@@ -260,7 +283,9 @@ def _rounds_body(
             c = jnp.where(bad, jnp.zeros_like(c), c)
             obj = jnp.where(bad, jnp.inf, obj)
             deg = jnp.where(bad, jnp.ones_like(deg), deg)
-        rkey = jax.random.fold_in(base_key, r)
+        # Global round numbering: a resumed run folds in the same indices the
+        # uninterrupted one would have, so replay is bit-for-bit.
+        rkey = jax.random.fold_in(key, rounds_done + r)
         k_samp, k_seed = jax.random.split(rkey)
 
         # --- coordination: choose the warm start -------------------------
@@ -289,7 +314,7 @@ def _rounds_body(
         # --- reseed degenerate + Lloyd ------------------------------------
         with jaxhooks.named_scope("round.reseed"):
             seeded = _reseed_degenerate_sharded(
-                k_seed, sample, base_c, base_deg, cfg, inner_axis
+                k_seed, sample, base_c, base_deg, cfg, inner_axis, sizes
             )
         with jaxhooks.named_scope("round.lloyd"):
             new_c, new_obj, counts = _lloyd_sharded(
@@ -298,7 +323,10 @@ def _rounds_body(
         # --- keep the best -------------------------------------------------
         # Non-finite candidates never displace the incumbent (-inf would
         # otherwise win the compare and poison every later coop round).
-        accept = (new_obj < obj) & jnp.isfinite(new_obj)
+        # Dead worker groups are frozen: their results are untrusted, so
+        # they never accept — the incumbent they carried stays intact for
+        # a later host-side revive/redistribution.
+        accept = (new_obj < obj) & jnp.isfinite(new_obj) & live
         c2 = jnp.where(accept, new_c, c)
         o2 = jnp.where(accept, new_obj, obj)
         d2_ = jnp.where(accept, counts == 0, deg)
@@ -308,11 +336,14 @@ def _rounds_body(
             do = (r + 1) % cfg.sync_every == 0
             gc, go, gd = coop_best(c2, o2, d2_, all_axes)
             # Replace the per-pod *worst* incumbent with the global best
-            # (non-finite incumbents count as worst, so they are replaced).
+            # (non-finite incumbents count as worst, so they are replaced;
+            # dead groups map to -inf so they never win worst — the global
+            # best must not be parked on a quarantined device).
             o2_safe = jnp.where(jnp.isfinite(o2), o2, jnp.inf)
-            worst = _owner_mask(o2_safe, intra_axes, select_min=False)
+            o2_cand = jnp.where(live, o2_safe, -jnp.inf)
+            worst = _owner_mask(o2_cand, intra_axes, sizes, select_min=False)
             better = go < o2_safe
-            take = do & worst & better
+            take = do & worst & better & live
             c2 = jnp.where(take, gc, c2)
             o2 = jnp.where(take, go, o2)
             d2_ = jnp.where(take, gd, d2_)
@@ -322,7 +353,9 @@ def _rounds_body(
     (c, obj, deg), objs = jax.lax.scan(
         round_fn, (c, obj, deg), jnp.arange(cfg.rounds)
     )
-    return c[None], obj[None], deg[None], objs[:, None]
+    new_rounds_done = (rounds_done + cfg.rounds).astype(jnp.int32)
+    return (c[None], obj[None], deg[None], keys, alive,
+            new_rounds_done, objs[:, None])
 
 
 def build_sharded_runner(
@@ -334,11 +367,13 @@ def build_sharded_runner(
 ):
     """Returns (fn, in_shardings, out_shardings) for the mesh.
 
-    fn(key, state, reservoir) -> (state', per-round objectives (rounds, W)).
+    fn(state, reservoir) -> (state', per-round objectives (rounds, W)).
 
     Worker axes are every mesh axis except the inner one; ``cfg.workers``
     must equal their product. Reservoir: (W, m_shard_total, d) sharded
-    (workers, inner, -).
+    (workers, inner, -). PRNG keys ride in the state (one per worker
+    group), so successive calls — and calls resumed from a checkpoint —
+    continue one deterministic stream of rounds.
     """
     worker_axes = tuple(a for a in mesh.axis_names if a != inner_axis)
     n_workers = 1
@@ -353,11 +388,21 @@ def build_sharded_runner(
 
     wspec = P(worker_axes)
     specs = dict(
-        key=P(),
         centroids=P(worker_axes, None, None),
         best_obj=wspec,
         degenerate=P(worker_axes, None),
+        key=P(worker_axes, None),
+        alive=wspec,
+        rounds_done=P(),
         reservoir=P(worker_axes, inner_axis, None),
+    )
+    state_specs = ShardedState(
+        centroids=specs["centroids"],
+        best_obj=specs["best_obj"],
+        degenerate=specs["degenerate"],
+        key=specs["key"],
+        alive=specs["alive"],
+        rounds_done=specs["rounds_done"],
     )
 
     body = functools.partial(
@@ -366,55 +411,89 @@ def build_sharded_runner(
         worker_axes=worker_axes,
         inner_axis=inner_axis,
         pod_axis=pod_axis,
+        sizes=dict(mesh.shape),
     )
     mapped = shard_map(
         body,
         mesh=mesh,
-        in_specs=(
-            specs["key"],
-            specs["centroids"],
-            specs["best_obj"],
-            specs["degenerate"],
-            specs["reservoir"],
-        ),
-        out_specs=(
-            specs["centroids"],
-            specs["best_obj"],
-            specs["degenerate"],
-            P(None, worker_axes),
-        ),
+        in_specs=tuple(state_specs) + (specs["reservoir"],),
+        out_specs=tuple(state_specs) + (P(None, worker_axes),),
         check_rep=False,
     )
 
-    def fn(key: Array, state: ShardedState, reservoir: Array):
-        c, o, d, objs = mapped(
-            key, state.centroids, state.best_obj, state.degenerate, reservoir
+    def fn(state: ShardedState, reservoir: Array):
+        rd = jnp.asarray(state.rounds_done, jnp.int32)
+        c, o, d, k, a, r, objs = mapped(
+            state.centroids, state.best_obj, state.degenerate,
+            state.key, state.alive, rd, reservoir,
         )
-        return ShardedState(c, o, d), objs
+        return ShardedState(c, o, d, k, a, r), objs
 
+    state_shardings = ShardedState(
+        *(NamedSharding(mesh, s) for s in state_specs)
+    )
     in_shardings = (
-        NamedSharding(mesh, specs["key"]),
-        ShardedState(
-            NamedSharding(mesh, specs["centroids"]),
-            NamedSharding(mesh, specs["best_obj"]),
-            NamedSharding(mesh, specs["degenerate"]),
-        ),
+        state_shardings,
         NamedSharding(mesh, specs["reservoir"]),
     )
     out_shardings = (
-        ShardedState(
-            NamedSharding(mesh, specs["centroids"]),
-            NamedSharding(mesh, specs["best_obj"]),
-            NamedSharding(mesh, specs["degenerate"]),
-        ),
+        state_shardings,
         NamedSharding(mesh, P(None, worker_axes)),
     )
     return fn, in_shardings, out_shardings
 
 
-def init_sharded_state(cfg: HPClustConfig, d: int) -> ShardedState:
+def init_sharded_state(
+    cfg: HPClustConfig, d: int, *, seed: int = 0
+) -> ShardedState:
+    """Virgin state: all centroids degenerate, objectives +inf, all groups
+    alive, one independent PRNG stream per worker group."""
     return ShardedState(
         centroids=jnp.zeros((cfg.workers, cfg.k, d), jnp.float32),
         best_obj=jnp.full((cfg.workers,), jnp.inf, jnp.float32),
         degenerate=jnp.ones((cfg.workers, cfg.k), jnp.bool_),
+        key=jax.random.split(jax.random.PRNGKey(seed), cfg.workers),
+        alive=jnp.ones((cfg.workers,), jnp.bool_),
+        rounds_done=jnp.zeros((), jnp.int32),
     )
+
+
+def state_shapes(cfg: HPClustConfig, d: int) -> ShardedState:
+    """ShapeDtypeStructs matching ``init_sharded_state`` (for AOT lowering)."""
+    w = cfg.workers
+    return ShardedState(
+        centroids=jax.ShapeDtypeStruct((w, cfg.k, d), jnp.float32),
+        best_obj=jax.ShapeDtypeStruct((w,), jnp.float32),
+        degenerate=jax.ShapeDtypeStruct((w, cfg.k), jnp.bool_),
+        key=jax.ShapeDtypeStruct((w, 2), jnp.uint32),
+        alive=jax.ShapeDtypeStruct((w,), jnp.bool_),
+        rounds_done=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def mark_dead(state: ShardedState, groups) -> ShardedState:
+    """Host-side quarantine: flip the liveness mask off for ``groups``.
+
+    A dead group is frozen by the engine (never accepts, contributes +inf
+    to every cooperative selection) until revived or redistributed away.
+    """
+    alive = np.array(jax.device_get(state.alive), copy=True)
+    alive[list(groups)] = False
+    return state._replace(alive=jnp.asarray(alive))
+
+
+def revive(state: ShardedState, groups=None) -> ShardedState:
+    """Undo ``mark_dead`` for ``groups`` (default: every group)."""
+    alive = np.array(jax.device_get(state.alive), copy=True)
+    alive[list(groups) if groups is not None else slice(None)] = True
+    return state._replace(alive=jnp.asarray(alive))
+
+
+def best_of(state: ShardedState) -> tuple[Array, Array]:
+    """Centroids/objective of the best *live* worker group (dead and
+    non-finite incumbents are masked out of the argmin)."""
+    obj = jnp.where(
+        state.alive & jnp.isfinite(state.best_obj), state.best_obj, jnp.inf
+    )
+    w = jnp.argmin(obj)
+    return state.centroids[w], obj[w]

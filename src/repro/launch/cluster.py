@@ -6,7 +6,6 @@
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -14,19 +13,6 @@ from repro import obs
 from repro.core import HPClust, HPClustConfig
 from repro.core.hpclust import stream_from_generator
 from repro.data import blob_stream
-
-
-@functools.lru_cache(maxsize=None)
-def _jit_sharded_runner(mesh, cfg):
-    """One compiled SPMD runner per (mesh, cfg) — shardings close over the
-    mesh, so caching here (not a fresh jit per main()) keeps the compile
-    cache shared across invocations in a process (JH003)."""
-    import jax
-
-    from repro.core import sharded
-
-    fn, in_sh, out_sh = sharded.build_sharded_runner(mesh, cfg)
-    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
 
 
 def main(argv=None):
@@ -46,6 +32,8 @@ def main(argv=None):
                     help="checkpoint worker state every window (resumable)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint every N windows (with --ckpt-dir)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the shard_map SPMD engine over the local "
                          "devices (the production code path at host scale)")
@@ -77,7 +65,8 @@ def _main_stream(args):
     )
     t0 = time.time()
     res = hp.fit_stream(
-        stream, checkpoint_dir=args.ckpt_dir, resume=args.resume
+        stream, checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every, resume=args.resume,
     )
     dt = time.time() - t0
     # evaluate on a fresh holdout window from the SAME stream distribution
@@ -105,39 +94,39 @@ def _main_sharded(args):
 
     Workers over the `data` axis, inner (distance) parallelism over `model`.
     With one CPU device this degrades to a 1x1 mesh — same program the
-    512-chip dry-run lowers.
+    512-chip dry-run lowers. Runs through the elastic driver, so
+    --ckpt-dir/--resume/--ckpt-every behave exactly like the single-host
+    path and a device loss mid-stream degrades the mesh instead of killing
+    the run (see repro.launch.elastic).
     """
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import sharded
-    from repro.core.strategies import HPClustConfig
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.elastic import run_elastic_sharded
 
-    mesh = make_host_mesh()
-    workers = mesh.shape["data"]
-    cfg = HPClustConfig(
-        k=args.k, sample_size=args.sample, workers=workers,
-        rounds=args.rounds * args.windows, strategy=args.strategy,
-        groups=2 if args.strategy == "hybrid2" else 1,
-        fixed_schedule=True, kmeans_iters=32,
+    stream = stream_from_generator(
+        blob_stream(args.window_size, n=args.dim, k=args.k, seed=args.seed),
+        args.windows,
     )
-    gen = blob_stream(args.window_size, n=args.dim, k=args.k, seed=args.seed)
-    window = next(gen)
-    reservoir = np.broadcast_to(
-        window, (workers,) + window.shape).copy()
-
-    state = sharded.init_sharded_state(cfg, args.dim)
-    jfn = _jit_sharded_runner(mesh, cfg)
     t0 = time.time()
-    st, objs = jfn(jax.random.PRNGKey(args.seed), state, jnp.asarray(reservoir))
-    objs = np.asarray(objs)
+    res = run_elastic_sharded(
+        stream,
+        k=args.k, sample_size=args.sample,
+        rounds_per_window=args.rounds, strategy=args.strategy,
+        seed=args.seed,
+        checkpoint_dir=args.ckpt_dir, resume=args.resume,
+        ckpt_every=args.ckpt_every,
+    )
     print(json.dumps({
-        "strategy": args.strategy, "mesh": dict(mesh.shape), "engine": "shard_map",
-        "best_sample_objective": float(np.min(np.asarray(st.best_obj))),
-        "monotone": bool((np.diff(objs, axis=0) <= 1e-3).all()),
-        "rounds_total": int(objs.shape[0]),
+        "strategy": args.strategy, "engine": "shard_map",
+        "workers": res.workers,
+        "best_sample_objective": res.objective,
+        "monotone": bool(
+            (np.diff(res.history, axis=0) <= 1e-3).all()
+        ) if res.history.size else True,
+        "rounds_total": int(res.history.shape[0]),
+        "windows": res.windows_done,
+        "recoveries": res.recoveries,
+        "resumed_at": res.resumed_at,
         "wall_s": round(time.time() - t0, 2),
     }, indent=1))
     return 0

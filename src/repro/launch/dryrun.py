@@ -85,6 +85,16 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on newer jax but a
+    list of per-program dicts on older releases (e.g. 0.4.x); normalise
+    to one flat dict either way."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _mem_dict(compiled) -> dict:
     try:
         ma = compiled.memory_analysis()
@@ -222,7 +232,7 @@ def _compile_cost(arch: str, shape: str, mesh, cfg_v) -> dict:
     _, fn, args_, _sh = build_cell(arch, shape, mesh, cfg=cfg_v)
     with mesh:
         compiled = fn.lower(*args_).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled)
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -307,7 +317,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
         t_compile = time.time()
     rec["lower_s"] = round(t_lower - t0, 2)
     rec["compile_s"] = round(t_compile - t_lower, 2)
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled)
     rec["cost"] = {
         "flops": float(ca.get("flops", -1.0)),
         "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
@@ -365,7 +375,7 @@ def run_hpclust_cell(*, multi_pod: bool, out_dir: Path,
     pass per round (kmeans_iters trimmed to the observed convergence
     budget). Recorded separately per the assignment.
     """
-    from repro.core.sharded import ShardedState
+    from repro.core.sharded import state_shapes
     from repro.core.strategies import HPClustConfig
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -380,20 +390,15 @@ def run_hpclust_cell(*, multi_pod: bool, out_dir: Path,
     )
     d, m_shard = 768, 1 << 20  # CORD-19-like dims; 1M-row reservoir/worker
     jfn = _jit_hpclust_runner(mesh, cfg, "pod" if multi_pod else None)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    state = ShardedState(
-        jax.ShapeDtypeStruct((workers, cfg.k, d), jnp.float32),
-        jax.ShapeDtypeStruct((workers,), jnp.float32),
-        jax.ShapeDtypeStruct((workers, cfg.k), jnp.bool_),
-    )
+    state = state_shapes(cfg, d)
     res_dtype = jnp.bfloat16 if optimized else jnp.float32
     reservoir = jax.ShapeDtypeStruct((workers, m_shard, d), res_dtype)
     t0 = time.time()
     with mesh:
-        lowered = jfn.lower(key, state, reservoir)
+        lowered = jfn.lower(state, reservoir)
         compiled = lowered.compile()
     hlo = compiled.as_text()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled)
     name = "hpclust-prod-opt" if optimized else "hpclust-prod"
     rec = {
         "arch": name, "shape": f"k25_s131072_w{workers}",

@@ -1,0 +1,281 @@
+"""Elastic driver for the shard_map engine: checkpoint/resume + degraded mesh.
+
+``run_elastic_sharded`` is the supervised window loop around the jitted SPMD
+runner (the sharded twin of ``HPClust.fit_stream``):
+
+  * every ``ckpt_every`` windows the full ``ShardedState`` (per-group PRNG
+    keys, liveness mask, round counter) + round history is host-gathered and
+    written through ``ShardedStreamCheckpointer``;
+  * a device-loss failure around the runner (``DeviceLostError`` from the
+    chaos harness, or a real ``XlaRuntimeError`` matched by message) triggers
+    degraded-mesh recovery: the lost devices are excluded, the mesh is
+    rebuilt over the survivors (``make_host_mesh(exclude=...)``), the runner
+    recompiles, and the state restores from the last checkpoint —
+    ``redistribute_state`` keeps the objective-ranked best incumbents when
+    the surviving mesh carries fewer worker groups;
+  * a crash anywhere else best-effort-saves the last good state before
+    re-raising, so a same-mesh resume replays bit-for-bit (the state carries
+    the PRNG keys and the global round counter).
+
+Keep-the-best makes all of this safe: a checkpointed incumbent is a complete
+restart point and any resumed run can only match-or-improve.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterable, NamedTuple, Optional
+
+import numpy as np
+
+from repro import obs
+from repro.core.strategies import HPClustConfig
+from repro.launch.mesh import make_host_mesh
+from repro.resilience.sharded_ckpt import (
+    ShardedStreamCheckpointer,
+    redistribute_state,
+)
+
+
+class DeviceLostError(RuntimeError):
+    """A device dropped out mid-collective.
+
+    Raised by the chaos injector ``drop_device_midstream``; real XLA
+    failures surface as ``XlaRuntimeError`` and are matched by message in
+    ``is_device_loss``. ``lost_devices`` names the dead ``Device.id``s so
+    the recovery path can exclude exactly them from the rebuilt mesh.
+    """
+
+    def __init__(self, msg: str, lost_devices: Iterable[int] = ()):
+        super().__init__(msg)
+        self.lost_devices = tuple(lost_devices)
+
+
+# Substrings (lowercased) that mark an XLA runtime failure as device loss
+# rather than a programming error. Deliberately conservative: anything else
+# propagates — retrying a genuine bug on a smaller mesh helps nobody.
+_LOSS_MARKERS = (
+    "device lost",
+    "device_lost",
+    "data_loss",
+    "nccl",
+    "socket closed",
+    "connection reset",
+    "peer down",
+    "halted",
+)
+
+
+def is_device_loss(exc: BaseException) -> bool:
+    """Does ``exc`` look like a device/interconnect loss (vs a real bug)?"""
+    if isinstance(exc, DeviceLostError):
+        return True
+    if type(exc).__name__ in ("XlaRuntimeError", "JaxRuntimeError"):
+        msg = str(exc).lower()
+        return any(m in msg for m in _LOSS_MARKERS)
+    return False
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sharded_runner(mesh, cfg, inner_axis="model", pod_axis=None):
+    """One compiled SPMD runner per (mesh, cfg) — shardings close over the
+    mesh, so caching here keeps the compile cache shared across windows and
+    across recoveries back onto a previously-seen mesh (JH003)."""
+    import jax
+
+    from repro.core import sharded
+
+    fn, in_sh, out_sh = sharded.build_sharded_runner(
+        mesh, cfg, inner_axis=inner_axis, pod_axis=pod_axis
+    )
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+
+class ElasticResult(NamedTuple):
+    centroids: np.ndarray        # (k, d) global best over live groups
+    objective: float
+    state: object                # final host-gathered ShardedState
+    history: np.ndarray          # (rounds_total, W_final) f32
+    windows_done: int
+    workers: int                 # worker groups on the final mesh
+    recoveries: int              # degraded-mesh rebuilds performed
+    resumed_at: Optional[int]    # window index restored from, or None
+
+
+def _worker_count(mesh, inner_axis: str) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a != inner_axis:
+            n *= mesh.shape[a]
+    return n
+
+
+def run_elastic_sharded(
+    stream: Iterable[np.ndarray],
+    *,
+    k: int,
+    sample_size: int = 2048,
+    rounds_per_window: int = 8,
+    strategy: str = "hybrid",
+    seed: int = 0,
+    checkpoint_dir=None,
+    resume: bool = False,
+    ckpt_every: int = 1,
+    mesh_shape=None,
+    inner_axis: str = "model",
+    pod_axis: str | None = None,
+    max_recoveries: int = 2,
+    kmeans_iters: int = 32,
+    runner_wrapper: Optional[Callable] = None,
+) -> ElasticResult:
+    """Run the sharded engine over ``stream`` windows, elastically.
+
+    ``runner_wrapper`` (chaos hook) wraps the jitted runner — it is
+    re-applied after every recompile, so invocation-counted injectors like
+    ``drop_device_midstream`` keep their global count across mesh rebuilds.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import sharded
+
+    def make_cfg(workers: int) -> HPClustConfig:
+        return HPClustConfig(
+            k=k, sample_size=sample_size, workers=workers,
+            rounds=rounds_per_window, strategy=strategy,
+            groups=2 if strategy == "hybrid2" else 1,
+            fixed_schedule=True, kmeans_iters=kmeans_iters,
+        )
+
+    def wrap(runner):
+        return runner_wrapper(runner) if runner_wrapper is not None else runner
+
+    def to_host(state):
+        return jax.device_get(state)
+
+    excluded: set[int] = set()
+    mesh = make_host_mesh(mesh_shape, exclude=())
+    workers = _worker_count(mesh, inner_axis)
+    cfg = make_cfg(workers)
+    run_fn = wrap(_jit_sharded_runner(mesh, cfg, inner_axis, pod_axis))
+
+    ckpt = (
+        ShardedStreamCheckpointer(checkpoint_dir)
+        if checkpoint_dir is not None else None
+    )
+
+    state = None
+    history = np.zeros((0, workers), np.float32)
+    windows_done = 0
+    resumed_at: Optional[int] = None
+    recoveries = 0
+
+    def adopt(snap, *, event: str):
+        """Install a checkpoint onto the *current* mesh, re-ranking only on a
+        worker-count change (a same-shape resume must replay bit-for-bit)."""
+        nonlocal state, history, windows_done, resumed_at
+        st, hist = snap.state, snap.history
+        if np.asarray(st.best_obj).shape[0] != workers:
+            st, hist = redistribute_state(st, hist, workers)
+        state = st
+        history = np.asarray(hist, np.float32)
+        windows_done = snap.windows_done
+        resumed_at = snap.windows_done
+        obs.event(event, windows_done=snap.windows_done, workers=workers)
+
+    if ckpt is not None and resume:
+        snap = ckpt.restore()
+        if snap is not None:
+            adopt(snap, event="sharded.resumed")
+
+    def recover(exc: BaseException):
+        nonlocal mesh, workers, cfg, run_fn, state, history, recoveries
+        lost = set(getattr(exc, "lost_devices", ()) or ())
+        excluded.update(lost)
+        mesh = make_host_mesh(None, exclude=excluded)
+        workers_new = _worker_count(mesh, inner_axis)
+        obs.event(
+            "resilience.mesh_degraded",
+            lost_devices=len(lost),
+            excluded_total=len(excluded),
+            mesh_shape=str(tuple(mesh.devices.shape)),
+            workers=workers_new,
+        )
+        workers = workers_new
+        cfg = make_cfg(workers)
+        # A degraded mesh is rebuilt 2-axis; if the pod axis did not survive,
+        # hybrid2 degrades gracefully to intra-mesh cooperation.
+        pa = pod_axis if pod_axis in mesh.axis_names else None
+        run_fn = wrap(_jit_sharded_runner(mesh, cfg, inner_axis, pa))
+        snap = ckpt.restore() if ckpt is not None else None
+        if snap is not None:
+            adopt(snap, event="sharded.resumed")
+        elif state is not None:
+            st, hist = redistribute_state(to_host(state), history, workers)
+            state, history = st, np.asarray(hist, np.float32)
+        recoveries += 1
+
+    try:
+        for wi, window in enumerate(stream):
+            if wi < windows_done:
+                continue  # consumed before the resume point
+            window = np.asarray(window, np.float32)
+            if state is None:
+                state = sharded.init_sharded_state(
+                    cfg, window.shape[1], seed=seed
+                )
+            while True:
+                reservoir = np.broadcast_to(
+                    window, (workers,) + window.shape
+                )
+                try:
+                    with obs.span("sharded.window", window=wi,
+                                  workers=workers):
+                        new_state, objs = run_fn(
+                            state, jnp.asarray(reservoir)
+                        )
+                        jax.block_until_ready(new_state)
+                except Exception as e:  # noqa: BLE001 - triaged below
+                    if not is_device_loss(e) or recoveries >= max_recoveries:
+                        raise
+                    recover(e)
+                    continue  # retry this window on the degraded mesh
+                state = new_state
+                history = np.concatenate(
+                    [history, np.asarray(objs, np.float32)], axis=0
+                )
+                windows_done = wi + 1
+                obs.inc("sharded.windows")
+                if ckpt is not None and windows_done % ckpt_every == 0:
+                    ckpt.save(windows_done, to_host(state), history)
+                break
+    except BaseException:
+        # Crash-save the last good state so a resume loses at most the
+        # in-flight window (mirrors fit_stream's crash path).
+        if ckpt is not None and state is not None and windows_done > 0:
+            try:
+                ckpt.save(windows_done, to_host(state), history)
+            except Exception:  # pragma: no cover - best effort
+                pass
+        raise
+
+    if state is None:
+        raise ValueError("empty stream: nothing to cluster")
+
+    st_h = to_host(state)
+    obj = np.where(
+        np.asarray(st_h.alive, bool)
+        & np.isfinite(np.asarray(st_h.best_obj, np.float32)),
+        np.asarray(st_h.best_obj, np.float32),
+        np.inf,
+    )
+    w = int(np.argmin(obj))
+    return ElasticResult(
+        centroids=np.asarray(st_h.centroids[w]),
+        objective=float(obj[w]),
+        state=st_h,
+        history=history,
+        windows_done=windows_done,
+        workers=workers,
+        recoveries=recoveries,
+        resumed_at=resumed_at,
+    )

@@ -174,6 +174,39 @@ def print_metrics(metrics: dict, out=sys.stdout) -> None:
         )
 
 
+def print_degraded_banner(events: list[dict], out=sys.stdout) -> None:
+    """Loud banner when the run survived a degraded-mesh recovery.
+
+    ``resilience.mesh_degraded`` marks lost devices + mesh rebuild;
+    ``sharded.resumed`` marks the checkpoint restore that followed.
+    """
+    degraded = [e for e in events if e["name"] == "resilience.mesh_degraded"]
+    if not degraded:
+        return
+    resumed = [e for e in events if e["name"] == "sharded.resumed"]
+    print("!" * 64, file=out)
+    print(f"!! DEGRADED MESH: {len(degraded)} recovery(ies) during this run",
+          file=out)
+    for e in degraded:
+        a = e.get("attrs", {})
+        print(
+            f"!!   lost {a.get('lost_devices', '?')} device(s) "
+            f"(total excluded {a.get('excluded_total', '?')}) -> "
+            f"mesh {a.get('mesh_shape', '?')}, "
+            f"{a.get('workers', '?')} worker group(s)",
+            file=out,
+        )
+    for e in resumed:
+        a = e.get("attrs", {})
+        print(
+            f"!!   resumed from checkpoint at window "
+            f"{a.get('windows_done', '?')} onto "
+            f"{a.get('workers', '?')} worker group(s)",
+            file=out,
+        )
+    print("!" * 64, file=out)
+
+
 def print_events(events: list[dict], out=sys.stdout) -> None:
     other = [e for e in events if e["name"] != "hpclust.round"]
     if not other:
@@ -202,6 +235,7 @@ def summarize(path: str, out=sys.stdout) -> int:
         return 1
     print(f"trace {path}: {len(spans)} span(s), {len(events)} event(s)",
           file=out)
+    print_degraded_banner(events, out)
     if spans:
         print_span_tree(spans, out)
     print_rounds(events, out)

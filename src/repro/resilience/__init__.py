@@ -12,6 +12,11 @@ from repro.resilience.retry import (
     retry_call,
 )
 from repro.resilience.sanitize import sanitize_window
+from repro.resilience.sharded_ckpt import (
+    ShardedStreamCheckpoint,
+    ShardedStreamCheckpointer,
+    redistribute_state,
+)
 from repro.resilience.stream_ckpt import StreamCheckpoint, StreamCheckpointer
 
 __all__ = [
@@ -19,9 +24,12 @@ __all__ = [
     "PreemptionGuard",
     "RetryError",
     "RetryPolicy",
+    "ShardedStreamCheckpoint",
+    "ShardedStreamCheckpointer",
     "StreamCheckpoint",
     "StreamCheckpointer",
     "backoff_delays",
+    "redistribute_state",
     "retry_call",
     "sanitize_window",
 ]

@@ -13,6 +13,14 @@ Catalogue:
   * ``failing_source``   — one-shot producer deaths for prefetch threads
   * ``CrashingCheckpointManager`` — save-time crash at chosen steps
   * (step failures for the LM trainer already exist: ``Trainer(failure_at=...)``)
+
+Sharded (collective) tier — drives ``repro.launch.elastic``:
+  * ``drop_device_midstream``  — runner wrapper raising a simulated
+                                 ``DeviceLostError`` at an exact invocation
+  * ``poison_worker_group``    — non-finite incumbents on chosen worker-axis
+                                 indices of a ``ShardedState``
+  * ``desync_pod``             — one pod's incumbents revert to stale/poisoned
+                                 (the hybrid2 cross-pod sync must repair it)
 """
 from __future__ import annotations
 
@@ -163,3 +171,89 @@ class CrashingCheckpointManager(CheckpointManager):
             self.crash_at_steps.discard(step)
             raise ChaosError(f"injected save crash at step {step}")
         super()._write(step, paths, host)
+
+
+# ---------------------------------------------------------------------------
+# sharded (collective) tier
+# ---------------------------------------------------------------------------
+
+def drop_device_midstream(*, at_call: int, lost_devices: Iterable[int]):
+    """Runner-wrapper factory simulating device loss mid-stream.
+
+    Returns a wrapper suitable for ``run_elastic_sharded(runner_wrapper=...)``:
+    the ``at_call``-th invocation of the jitted runner (0-based, counted
+    globally across mesh rebuilds — the engine re-wraps the recompiled
+    runner with the same factory) raises ``DeviceLostError`` naming
+    ``lost_devices``. One-shot and exact: the retry on the degraded mesh
+    proceeds normally.
+    """
+    from repro.launch.elastic import DeviceLostError
+
+    lost = tuple(lost_devices)
+    calls = itertools.count()
+
+    def wrapper(runner):
+        def wrapped(*args, **kwargs):
+            i = next(calls)
+            if i == at_call:
+                raise DeviceLostError(
+                    f"injected device loss at runner call {i}", lost
+                )
+            return runner(*args, **kwargs)
+
+        return wrapped
+
+    return wrapper
+
+
+def poison_worker_group(state, groups: Iterable[int], *, mode: str = "nan_obj"):
+    """``poison_state`` for a ``ShardedState`` (keys/liveness/rounds intact).
+
+    Modes mirror ``poison_state``: ``nan_obj``, ``neginf_obj``,
+    ``nan_centroids``. The engine's in-round quarantine plus the liveness
+    mask must keep the poison from ever owning a cooperative broadcast.
+    """
+    c = np.array(state.centroids, np.float32, copy=True)
+    o = np.array(state.best_obj, np.float32, copy=True)
+    for w in groups:
+        if mode == "nan_obj":
+            o[w] = np.nan
+        elif mode == "neginf_obj":
+            o[w] = -np.inf
+        elif mode == "nan_centroids":
+            c[w] = np.nan
+        else:
+            raise ValueError(f"unknown poison mode {mode!r}")
+    return state._replace(centroids=jnp.asarray(c), best_obj=jnp.asarray(o))
+
+
+def desync_pod(state, pod: int, *, pods: int, mode: str = "stale"):
+    """Desynchronize one pod of a hybrid2 ``ShardedState``.
+
+    Worker groups are laid out pod-major (``('pod', 'data')`` flattening), so
+    pod ``p`` owns the contiguous slice of ``W // pods`` groups. ``stale``
+    reverts the pod to the virgin all-degenerate state (as if it missed every
+    sync since start); ``poison`` NaNs its objectives. The next cross-pod
+    sync must repair the pod without regressing the other pods' incumbents.
+    """
+    c = np.array(state.centroids, np.float32, copy=True)
+    o = np.array(state.best_obj, np.float32, copy=True)
+    deg = np.array(state.degenerate, np.bool_, copy=True)
+    w = o.shape[0]
+    if pods < 1 or w % pods:
+        raise ValueError(f"workers={w} not divisible into {pods} pods")
+    per = w // pods
+    sl = slice(pod * per, (pod + 1) * per)
+    if mode == "stale":
+        c[sl] = 0.0
+        o[sl] = np.inf
+        deg[sl] = True
+    elif mode == "poison":
+        o[sl] = np.nan
+    else:
+        raise ValueError(f"unknown desync mode {mode!r}")
+    return state._replace(
+        centroids=jnp.asarray(c),
+        best_obj=jnp.asarray(o),
+        degenerate=jnp.asarray(deg),
+    )

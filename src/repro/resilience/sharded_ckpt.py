@@ -1,0 +1,150 @@
+"""Checkpointing for the shard_map SPMD engine: ShardedState + round history.
+
+The sharded twin of ``stream_ckpt``: layout reuses ``CheckpointManager``
+verbatim (atomic tmp+rename writes, sha256 integrity, retention), with the
+*window index* as the step number:
+
+    <dir>/step_<windows_done>/leaves.npz   # flattened payload leaves
+    <dir>/step_<windows_done>/meta.json
+
+Payload pytree (dict keys sorted by tree_flatten, so the layout is stable):
+
+    history   (rounds_so_far, W) f32  — per-round incumbent objectives
+    state     ShardedState            — centroids, best_obj, degenerate,
+                                        per-group PRNG keys, liveness mask,
+                                        global round counter
+
+Leaves are host-gathered full arrays (``CheckpointManager`` calls
+``jax.device_get``), so a checkpoint written on one mesh restores onto any
+other — the elastic contract. ``redistribute_state`` implements the
+mesh-shrink rank rule: restoring W incumbents onto W' worker groups keeps
+the objective-ranked best W' survivors (dead / non-finite incumbents rank
+last), so a shrunk mesh loses only its worst searchers; a grown mesh clones
+the ranked best with forked PRNG keys. Because every surviving group keeps
+its own key and the global round counter rides along, a same-mesh resume
+replays the uninterrupted run bit-for-bit, and any resume can only
+match-or-improve by keep-the-best.
+"""
+from __future__ import annotations
+
+import os
+from typing import TYPE_CHECKING, Any, NamedTuple, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+if TYPE_CHECKING:  # repro.core imports this package — keep the cycle lazy
+    from repro.core.sharded import ShardedState
+
+
+class ShardedStreamCheckpoint(NamedTuple):
+    windows_done: int
+    state: Any                  # ShardedState; leaves are host numpy arrays
+    history: np.ndarray         # (rounds_so_far, W) f32
+
+
+def _template() -> dict:
+    from repro.core.sharded import ShardedState
+
+    # Only leaf COUNT and dtypes matter to CheckpointManager.restore; shapes
+    # come from the stored arrays (this is what makes the template d-free).
+    return {
+        "history": np.zeros((0, 0), np.float32),
+        "state": ShardedState(
+            centroids=np.zeros((0,), np.float32),
+            best_obj=np.zeros((0,), np.float32),
+            degenerate=np.zeros((0,), np.bool_),
+            key=np.zeros((0,), np.uint32),
+            alive=np.zeros((0,), np.bool_),
+            rounds_done=np.int32(0),
+        ),
+    }
+
+
+def redistribute_state(
+    state: "ShardedState", history: np.ndarray, new_workers: int
+) -> tuple["ShardedState", np.ndarray]:
+    """Re-rank W checkpointed incumbents onto ``new_workers`` worker groups.
+
+    Rank rule: ascending incumbent objective, with dead (liveness mask off)
+    and non-finite incumbents ranked last — a shrunk mesh keeps the best
+    survivors. A grown mesh cycles the ranking and forks each clone's PRNG
+    key (``fold_in`` by destination slot) so replicas explore distinct
+    streams. History columns follow their incumbents, so per-column
+    monotonicity survives the reshuffle.
+    """
+    from repro.core.sharded import ShardedState
+
+    c = np.asarray(state.centroids, np.float32)
+    o = np.asarray(state.best_obj, np.float32)
+    deg = np.asarray(state.degenerate, np.bool_)
+    key = np.asarray(state.key, np.uint32)
+    alive = np.asarray(state.alive, np.bool_)
+    w = o.shape[0]
+    if new_workers < 1:
+        raise ValueError("new_workers must be positive")
+    rank_obj = np.where(alive & np.isfinite(o), o, np.inf)
+    order = np.argsort(rank_obj, kind="stable")
+    src = order[np.arange(new_workers) % w]
+    new_key = key[src].copy()
+    if new_workers > w:
+        import jax
+
+        for j in range(w, new_workers):
+            new_key[j] = np.asarray(jax.random.fold_in(key[src[j]], j))
+    hist = np.asarray(history, np.float32)
+    if hist.size:
+        hist = hist[:, src]
+    else:
+        hist = np.zeros((0, new_workers), np.float32)
+    return (
+        ShardedState(
+            centroids=c[src],
+            best_obj=o[src],
+            degenerate=deg[src],
+            key=new_key,
+            alive=alive[src],
+            rounds_done=np.asarray(state.rounds_done, np.int32),
+        ),
+        hist,
+    )
+
+
+class ShardedStreamCheckpointer:
+    """Periodic ShardedState checkpoints keyed by windows-consumed."""
+
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3,
+                 async_save: bool = False):
+        self.mgr = CheckpointManager(directory, keep=keep,
+                                     async_save=async_save)
+
+    def latest(self) -> Optional[int]:
+        return self.mgr.latest_step()
+
+    def save(
+        self,
+        windows_done: int,
+        state: "ShardedState",
+        history: np.ndarray,
+        *,
+        block: bool = True,
+    ) -> None:
+        tree = {
+            "history": np.asarray(history, np.float32),
+            "state": state,
+        }
+        self.mgr.save(windows_done, tree, block=block)
+
+    def restore(
+        self, *, step: Optional[int] = None
+    ) -> Optional[ShardedStreamCheckpoint]:
+        """Latest (or given) checkpoint, or None when the directory is empty."""
+        if step is None and self.mgr.latest_step() is None:
+            return None
+        windows_done, tree = self.mgr.restore(_template(), step=step)
+        return ShardedStreamCheckpoint(
+            windows_done=int(windows_done),
+            state=tree["state"],
+            history=np.asarray(tree["history"], np.float32),
+        )

@@ -1,0 +1,42 @@
+"""Known-bad sharding specs for the SH check family.
+
+NEVER imported or executed — consumed as text by tests/test_analysis.py.
+``# F:<CODE>`` tags mark the exact line each finding must anchor to.
+"""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+pod_mesh = Mesh(jax.devices(), axis_names=("pod", "data"))
+
+# Typo'd axis: silently replicates instead of sharding over 'data'.
+bad = NamedSharding(mesh, P("dat", None))  # F:SH001
+
+# One-hop resolution: the spec variable's P(...) is still checked
+# (the finding anchors at the bad literal inside the P call).
+spec = P(("data", "modle"), None)  # F:SH001
+also_bad = NamedSharding(mesh, spec)
+
+# Axis from a *different* mesh than the one this call consumes.
+crossed = NamedSharding(pod_mesh, P("model"))  # F:SH001
+
+good = NamedSharding(mesh, P("data", "model"))
+replicated = NamedSharding(mesh, P(None))
+
+
+def body(x):
+    return x
+
+
+mapped = shard_map(
+    body,
+    mesh=mesh,
+    in_specs=(P("data", "modell"),),  # F:SH001
+    out_specs=P("data"),
+)
+
+
+def unknown_mesh(m):
+    # Mesh is a parameter — not resolvable, so never flagged.
+    return NamedSharding(m, P("definitely_not_an_axis"))

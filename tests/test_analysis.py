@@ -31,7 +31,8 @@ def expected_findings(path: Path) -> set[tuple[str, int]]:
 
 
 @pytest.mark.parametrize(
-    "name", ["bad_pallas.py", "bad_jit.py", "bad_dtype.py", "bad_obs.py"]
+    "name", ["bad_pallas.py", "bad_jit.py", "bad_dtype.py", "bad_obs.py",
+             "bad_sharding.py"]
 )
 def test_fixture_findings_exact(name):
     """Each tagged line yields exactly its finding — code, file and line —

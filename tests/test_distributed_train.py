@@ -24,9 +24,9 @@ from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 
-# small real mesh: 4-way DP x 2-way TP
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# small real mesh: 4-way DP x 2-way TP (axis_types defaults to Auto, and
+# the kwarg does not exist on older jax)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 cfg = get_config("qwen3-0.6b", smoke=True)
 
 p_shard = shd.param_shardings(cfg, mesh)
@@ -86,14 +86,12 @@ from repro.checkpoint import CheckpointManager
 mgr = CheckpointManager("%s")
 tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
 if "%s" == "save":
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     mgr.save(3, {"w": jax.device_put(tree["w"], sh)})
     print(json.dumps({"saved": True}))
 else:
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, out = mgr.restore(tree, shardings=sh)
     print(json.dumps({

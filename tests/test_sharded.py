@@ -32,14 +32,15 @@ x = np.concatenate([c + rng.normal(scale=0.5, size=(500, 8)) for c in centers]).
 rng.shuffle(x)
 res = np.broadcast_to(x, (4, 2500, 8)).copy()
 fn, in_sh, out_sh = sharded.build_sharded_runner(mesh, cfg)
-state = sharded.init_sharded_state(cfg, 8)
+state = sharded.init_sharded_state(cfg, 8, seed=0)
 jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
-st, objs = jfn(jax.random.PRNGKey(0), state, jnp.asarray(res))
+st, objs = jfn(state, jnp.asarray(res))
 objs = np.asarray(objs)
 print(json.dumps({
     "monotone": bool((np.diff(objs, axis=0) <= 1e-3).all()),
     "best": float(np.min(np.asarray(st.best_obj))),
     "finite": bool(np.isfinite(objs).all()),
+    "rounds_done": int(np.asarray(st.rounds_done)),
 }))
 """
 
@@ -54,6 +55,7 @@ def test_sharded_runner_on_8_devices(strategy):
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec["finite"]
     assert rec["monotone"]
+    assert rec["rounds_done"] == 6
     # blobs: optimal sample objective ~ 64 points * d * sigma^2 = 128
     assert rec["best"] < 500.0, rec
 
@@ -74,9 +76,9 @@ rng = np.random.default_rng(0)
 x = rng.normal(size=(1000, 6)).astype(np.float32)
 res = np.broadcast_to(x, (4, 1000, 6)).copy()
 fn, in_sh, out_sh = sharded.build_sharded_runner(mesh, cfg, pod_axis="pod")
-state = sharded.init_sharded_state(cfg, 6)
+state = sharded.init_sharded_state(cfg, 6, seed=0)
 jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
-st, objs = jfn(jax.random.PRNGKey(0), state, jnp.asarray(res))
+st, objs = jfn(state, jnp.asarray(res))
 print(json.dumps({"finite": bool(np.isfinite(np.asarray(objs)).all()),
                   "monotone": bool((np.diff(np.asarray(objs), axis=0) <= 1e-3).all())}))
 """
@@ -104,7 +106,9 @@ def test_dryrun_cell_compiles_on_host_mesh():
     cfg, fn, args, _ = build_cell("qwen3-0.6b", "train_4k", mesh)
     with mesh:
         compiled = fn.lower(*args).compile()
-    ca = compiled.cost_analysis()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns per-program dicts
+        ca = ca[0] if ca else {}
     assert ca.get("flops", 0) > 1e12
 
 
