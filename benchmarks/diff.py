@@ -1,0 +1,90 @@
+"""Benchmark regression gate: diff a fresh BENCH JSON against a baseline.
+
+  PYTHONPATH=src python -m benchmarks.diff BENCH_hpclust.json \
+      --baseline benchmarks/BENCH_baseline.json [--threshold 0.2] [--update]
+
+Rules (per row name shared by both files):
+  * timing rows compare ``us_per_call``: FAIL when the new time exceeds the
+    baseline by more than ``--threshold`` (default 20%);
+  * ``*/speedup`` rows compare ``derived`` the other way around (higher is
+    better): FAIL when the new ratio drops below baseline*(1-threshold);
+  * a baseline row missing from the new results FAILs (a silently dropped
+    benchmark is itself a regression);
+  * rows only in the new results are reported informationally — commit them
+    into the baseline with ``--update``.
+
+``--update`` rewrites the baseline from the new results and exits 0; run it
+in the CI container (or an equally-provisioned box) so the committed numbers
+match the environment the gate runs in. Exit status: 0 clean, 1 regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def compare(new: dict, base: dict, threshold: float) -> tuple[list[str], list[str]]:
+    """Return (failures, notes) comparing ``new`` results to ``base``."""
+    failures: list[str] = []
+    notes: list[str] = []
+    for name in sorted(base):
+        if name not in new:
+            failures.append(f"{name}: missing from new results")
+            continue
+        if name.endswith("/speedup"):
+            b, n = base[name]["derived"], new[name]["derived"]
+            floor = b * (1.0 - threshold)
+            line = f"{name}: speedup {b:.3f} -> {n:.3f} (floor {floor:.3f})"
+            (failures if n < floor else notes).append(line)
+        else:
+            b, n = base[name]["us_per_call"], new[name]["us_per_call"]
+            ceil = b * (1.0 + threshold)
+            line = f"{name}: {b:.1f}us -> {n:.1f}us (ceiling {ceil:.1f}us)"
+            (failures if n > ceil else notes).append(line)
+    for name in sorted(set(new) - set(base)):
+        notes.append(f"{name}: new row (not in baseline; use --update to add)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("results", help="fresh BENCH JSON (from benchmarks.run)")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON to gate against")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2 = 20%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the new results and exit")
+    args = ap.parse_args(argv)
+
+    new = _load(args.results)
+    if args.update:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(new, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline updated: {args.baseline} ({len(new)} rows)")
+        return 0
+
+    base = _load(args.baseline)
+    failures, notes = compare(new, base, args.threshold)
+    for line in notes:
+        print(f"  ok   {line}")
+    for line in failures:
+        print(f"  FAIL {line}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} benchmark regression(s) "
+              f"(threshold {args.threshold:.0%})", file=sys.stderr)
+        return 1
+    print(f"no regressions across {len(base)} baseline row(s) "
+          f"(threshold {args.threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,12 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import flags, obs
 from repro.core import strategies
 from repro.core.strategies import HPClustConfig, RoundMetrics, WorkerState
+from repro.data import device_prefetch
 from repro.kernels import ops
 from repro.resilience.preemption import PreemptionGuard
-from repro.resilience.sanitize import sanitize_window
 from repro.resilience.stream_ckpt import StreamCheckpointer
 
 Array = jax.Array
@@ -73,10 +73,17 @@ class HPClustResult(NamedTuple):
 
 @dataclasses.dataclass
 class HPClust:
-    """Estimator wrapper around the compiled strategy engine."""
+    """Estimator wrapper around the compiled strategy engine.
+
+    ``prefetch`` controls the device-prefetch depth for ``fit_stream``:
+    ``None``/``True`` -> the ``REPRO_PREFETCH`` default (2), ``False``/``0``
+    -> fully synchronous, an int -> that queue depth. Results are
+    bit-identical either way (docs/performance.md).
+    """
 
     config: HPClustConfig
     seed: int = 0
+    prefetch: int | bool | None = None
 
     def fit(self, x: np.ndarray | Array) -> HPClustResult:
         """Cluster a (m, d) window (single-shot MSSC)."""
@@ -164,33 +171,53 @@ class HPClust:
         guard = PreemptionGuard() if own_guard else preemption_guard
         if own_guard:
             guard.install()
+        donate = flags.donate_enabled()
+        run_fn = _jit_run_from_state_donated if donate else _jit_run_from_state
+        # Sanitize + H2D run on a background thread while the previous window
+        # computes (depth 0 = the synchronous path, bit-identical).
+        stream = device_prefetch.device_stream(
+            windows,
+            depth=flags.prefetch_depth(self.prefetch),
+            sanitize=sanitize,
+            start_at=windows_done,
+            # Preemption is sampled in PULL order and delivered per item, so
+            # the stop window is the same whether the producer ran ahead
+            # (prefetch on) or not (see device_prefetch.device_stream).
+            flag_fn=lambda: guard.preempted,
+        )
         try:
-            for wi, window in enumerate(windows):
-                if wi < windows_done:
-                    continue  # fast-forward a resumed stream
-                if guard.preempted:
+            for item in stream:
+                wi = item.index
+                if item.flagged:
                     preempted = True
                     break
                 with obs.span("stream.window", window=wi) as w_span:
-                    if sanitize:
-                        with obs.span("sanitize.window"):
-                            window, n_bad = sanitize_window(np.asarray(window))
-                        sanitized_rows += n_bad
-                        if n_bad:
-                            obs.inc("stream.sanitized_rows", n_bad)
-                        if window is None:  # every row non-finite: skip
-                            windows_done = wi + 1
-                            obs.event("stream.window_skipped", window=wi)
-                            continue
-                    data = jnp.asarray(window, jnp.float32)
+                    sanitized_rows += item.n_bad
+                    if item.n_bad:
+                        obs.inc("stream.sanitized_rows", item.n_bad)
+                    if item.host is None:  # every row non-finite: skip
+                        windows_done = wi + 1
+                        obs.event("stream.window_skipped", window=wi)
+                        continue
+                    data = item.device
                     w_span.set(rows=int(data.shape[0]))
                     if state is None:
                         key, k0 = jax.random.split(key)
                         state = strategies.init_state(
                             k0, run_cfg, data.shape[1])
+                    # Donation deletes the input state's buffers even when
+                    # the step fails — keep a host snapshot so the crash
+                    # checkpoint below can never read a donated buffer.
+                    snapshot = None
+                    if donate and ckpt is not None:
+                        snapshot = jax.device_get(state)
                     with obs.span("hpclust.rounds", rounds=run_cfg.rounds):
-                        state, metrics = _jit_run_from_state(
-                            state, data, cfg=run_cfg)
+                        try:
+                            state, metrics = run_fn(state, data, cfg=run_cfg)
+                        except BaseException:
+                            if snapshot is not None:
+                                state = snapshot
+                            raise
                         _emit_round_metrics(metrics, window=wi)
                     hist.append(np.asarray(metrics.best_obj))
                     windows_done = wi + 1
@@ -201,9 +228,6 @@ class HPClust:
                         with obs.span("ckpt.save", window=windows_done):
                             ckpt.save(windows_done, state, _history(),
                                       sanitized_rows)
-                if guard.preempted:
-                    preempted = True
-                    break
         except BaseException:
             # A dying stream (or step) must not lose the incumbents: persist
             # the last good state, then let the original failure propagate.
@@ -214,9 +238,13 @@ class HPClust:
                     pass  # never mask the original failure with a save error
             raise
         finally:
+            stream.close()  # deterministic prefetch-thread shutdown
             if own_guard:
                 guard.restore()
 
+        # A signal that landed during the final window's compute (stream
+        # already exhausted) still counts as a preemption.
+        preempted = preempted or guard.preempted
         if preempted:
             obs.event("resilience.preempted", window=windows_done)
         if preempted and ckpt is not None and state is not None \
@@ -257,17 +285,32 @@ class HPClust:
         return np.concatenate(out) if out else np.zeros((0,), np.int32)
 
     def objective(self, x, centroids, *, batch: int = 1 << 16) -> float:
-        """f(C, X) over a full dataset, streamed in batches."""
+        """f(C, X) over a full dataset, streamed in batches.
+
+        The ragged tail batch is padded back up to the fixed ``batch`` shape
+        so ONE compiled program serves the whole pass (a (m % batch, d) tail
+        used to retrace). Pad rows are copies of centroid 0 — distance 0 to
+        their nearest centroid — and any numerical residue is measured with
+        a fixed (1, d) probe and subtracted, so the value is unchanged.
+        """
         c = jnp.asarray(centroids, jnp.float32)
+        c0 = np.asarray(c)[0]
         x = np.asarray(x, np.float32)
+        impl = self.config.impl
         total = 0.0
         with obs.span("hpclust.objective", rows=len(x), batch=batch):
             for i in range(0, len(x), batch):
+                sl = x[i : i + batch]
+                n_pad = batch - len(sl) if len(x) > batch else 0
+                if n_pad:
+                    sl = np.concatenate(
+                        [sl, np.broadcast_to(c0, (n_pad, c0.shape[0]))])
                 total += float(
-                    ops.mssc_objective(
-                        jnp.asarray(x[i : i + batch]), c, impl=self.config.impl
-                    )
-                )
+                    ops.mssc_objective(jnp.asarray(sl), c, impl=impl))
+                if n_pad:
+                    total -= n_pad * float(
+                        ops.mssc_objective(jnp.asarray(c0[None]), c,
+                                           impl=impl))
         return total
 
 
@@ -278,9 +321,14 @@ def _run_from_state(state: WorkerState, data: Array, *, cfg: HPClustConfig):
 
 # Jitted once at import: a fresh jax.jit wrapper per fit()/fit_stream() call
 # would key the compile cache on the wrapper identity and re-trace for every
-# estimator instance (analysis check JH003).
+# estimator instance (analysis check JH003). The donated variant reuses the
+# input WorkerState's buffers for the output carry (REPRO_DONATE, default
+# on); it is a SEPARATE jit object so flipping the flag mid-process can
+# never alias a stale compile-cache entry.
 _jit_run_hpclust = jax.jit(strategies.run_hpclust, static_argnames=("cfg",))
 _jit_run_from_state = jax.jit(_run_from_state, static_argnames=("cfg",))
+_jit_run_from_state_donated = jax.jit(
+    _run_from_state, static_argnames=("cfg",), donate_argnums=(0,))
 
 
 def stream_from_generator(

@@ -1,6 +1,12 @@
+from repro.data.device_prefetch import (
+    PrefetchedWindow,
+    default_place,
+    device_stream,
+)
 from repro.data.pipeline import (
     PipelineError,
     blob_stream,
+    device_windows,
     gaussian_blobs,
     prefetch_iter,
     token_batches,
@@ -8,7 +14,11 @@ from repro.data.pipeline import (
 
 __all__ = [
     "PipelineError",
+    "PrefetchedWindow",
     "blob_stream",
+    "default_place",
+    "device_stream",
+    "device_windows",
     "gaussian_blobs",
     "prefetch_iter",
     "token_batches",

@@ -1,0 +1,185 @@
+"""Double-buffered host-to-device window prefetch for the streaming tier.
+
+``fit_stream`` / ``run_elastic_sharded`` consume an unbounded window stream;
+without prefetch every window serializes host ingest -> sanitize -> H2D
+transfer -> compute. This module overlaps the first three stages with the
+fourth: while window *w* computes on the device, a background thread
+sanitizes window *w+1* and lands it via ``jax.device_put`` (which is
+asynchronous — the transfer itself overlaps compute; on the SPMD tier the
+caller's ``place`` hook supplies the mesh's ``NamedSharding``). With a queue
+depth of N the device always has up to N ready windows to chew through.
+
+Bit-identity contract (tested in tests/test_throughput.py): the prefetched
+stream yields EXACTLY what the synchronous path computes — same sanitize
+call, same f32 conversion, same skip semantics for resumed (``start_at``)
+and all-bad windows — so prefetch on/off cannot change results, only their
+arrival time. Producer exceptions are re-raised in the consumer as the
+ORIGINAL exception object (the chaos suites assert on exception types).
+
+Observability: ``prefetch.depth`` (ready windows in the queue) and
+``prefetch.overlap_s`` (host prepare seconds hidden behind device compute
+for each window) gauges, when a ``repro.obs`` recorder is active.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterable, Iterator, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.resilience.sanitize import sanitize_window
+
+_POLL_S = 0.2
+
+
+class PrefetchedWindow(NamedTuple):
+    """One stream window, sanitized and (unless skipped) device-resident."""
+
+    index: int                    # position in the raw stream
+    host: Optional[np.ndarray]    # sanitized f32 host copy; None => skip
+    device: Any                   # placed device value (None when skipped)
+    n_bad: int                    # non-finite rows repaired by sanitize
+    flagged: bool = False         # flag_fn() sampled when this was pulled
+
+
+class _Done:
+    """Queue sentinel: the raw stream finished cleanly."""
+
+
+class _Failure:
+    """Queue sentinel carrying the producer thread's exception."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+def default_place(w: np.ndarray) -> jax.Array:
+    """Single-device placement — identical to ``jnp.asarray(w, f32)`` for an
+    f32 host array (the synchronous path's conversion)."""
+    return jax.device_put(w)
+
+
+def _prepare(
+    wi: int,
+    window: Any,
+    sanitize: bool,
+    place: Callable[[np.ndarray], Any],
+    flagged: bool,
+) -> PrefetchedWindow:
+    """sanitize -> f32 -> device_put for one window (either thread)."""
+    w = np.asarray(window)
+    n_bad = 0
+    if sanitize:
+        with obs.span("sanitize.window"):
+            w, n_bad = sanitize_window(w)
+        if w is None:  # every row non-finite: the caller skips + counts it
+            return PrefetchedWindow(wi, None, None, n_bad, flagged)
+    w = np.asarray(w, np.float32)
+    return PrefetchedWindow(wi, w, place(w), n_bad, flagged)
+
+
+def device_stream(
+    windows: Iterable[Any],
+    *,
+    depth: int,
+    sanitize: bool = True,
+    start_at: int = 0,
+    place: Callable[[np.ndarray], Any] | None = None,
+    flag_fn: Callable[[], bool] | None = None,
+) -> Iterator[PrefetchedWindow]:
+    """Yield ``PrefetchedWindow``s for ``windows[start_at:]``.
+
+    ``depth <= 0`` is the synchronous fallback (no thread, no queue) — the
+    opt-out path and the reference for the bit-identity contract. Windows
+    below ``start_at`` (a checkpoint fast-forward) are consumed from the raw
+    iterator without sanitizing, exactly like the pre-prefetch resume loop.
+
+    ``place`` maps a sanitized f32 host array to its device form; the SPMD
+    tier passes a broadcast + ``NamedSharding`` placement, everyone else
+    gets ``default_place``. The host copy rides along in the yielded item so
+    recovery paths can re-place the window after a mesh change.
+
+    ``flag_fn`` is the preemption hook: it is sampled in PULL ORDER (right
+    after each raw window is taken from ``windows``) and delivered as
+    ``item.flagged``, so a consumer that stops on the first flagged item
+    behaves identically whether the producer ran ahead or not. A True
+    sample also ends production — a preempted stream must not keep pulling.
+    """
+    place = place or default_place
+    if depth <= 0:
+        for wi, window in enumerate(windows):
+            if wi < start_at:
+                continue
+            flagged = bool(flag_fn()) if flag_fn is not None else False
+            yield _prepare(wi, window, sanitize, place, flagged)
+            if flagged:
+                return
+        return
+
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def _put(item: Any) -> None:
+        # Bounded put that gives up when the consumer has left (generator
+        # closed): a daemon thread must never wedge on a full queue.
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=_POLL_S)
+                return
+            except queue.Full:
+                continue
+
+    def run() -> None:
+        try:
+            for wi, window in enumerate(windows):
+                if stop.is_set():
+                    return
+                if wi < start_at:
+                    continue
+                flagged = bool(flag_fn()) if flag_fn is not None else False
+                t0 = time.perf_counter()
+                item = _prepare(wi, window, sanitize, place, flagged)
+                _put((item, time.perf_counter() - t0))
+                if flagged:
+                    break
+            _put(_Done())
+        except BaseException as e:  # noqa: BLE001 — forwarded, never silent
+            _put(_Failure(e))
+
+    t = threading.Thread(
+        target=run, name="repro-device-prefetch", daemon=True)
+    t.start()
+    try:
+        while True:
+            waited = 0.0
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    got = q.get(timeout=_POLL_S)
+                    waited += time.perf_counter() - t0
+                    break
+                except queue.Empty:
+                    waited += time.perf_counter() - t0
+                    if not t.is_alive() and q.empty():
+                        raise RuntimeError(
+                            "device prefetch thread died without reporting "
+                            "an error"
+                        ) from None
+            if isinstance(got, _Done):
+                return
+            if isinstance(got, _Failure):
+                raise got.exc  # the original exception, type preserved
+            item, prep_s = got
+            rec = obs.get_recorder()
+            if rec is not None:
+                rec.gauge("prefetch.depth", q.qsize())
+                # Host prepare time hidden behind device compute: what the
+                # consumer did NOT have to wait for.
+                rec.gauge("prefetch.overlap_s", max(0.0, prep_s - waited))
+            yield item
+    finally:
+        stop.set()

@@ -138,6 +138,33 @@ def prefetch_iter(
         yield item
 
 
+def device_windows(
+    make_gen: Callable[[], Iterator],
+    *,
+    depth: int = 2,
+    sanitize: bool = True,
+    start_at: int = 0,
+    place=None,
+    **prefetch_kwargs,
+) -> Iterator:
+    """Full 3-stage streaming pipeline (docs/performance.md):
+
+      host ingest (supervised ``prefetch_iter`` thread)
+        -> sanitize + H2D (``device_stream`` thread)
+          -> compute (the caller).
+
+    Yields ``repro.data.device_prefetch.PrefetchedWindow`` items. Both
+    threaded stages degrade independently: ``depth<=0`` makes the H2D stage
+    synchronous, ``prefetch_kwargs['size']=0`` is rejected by ``queue`` so
+    ingest supervision always runs.
+    """
+    from repro.data import device_prefetch
+
+    src = prefetch_iter(make_gen, **prefetch_kwargs)
+    return device_prefetch.device_stream(
+        src, depth=depth, sanitize=sanitize, start_at=start_at, place=place)
+
+
 def gaussian_blobs(
     m: int,
     *,

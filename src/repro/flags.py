@@ -1,0 +1,84 @@
+"""Environment-gated performance flags for the streaming throughput engine.
+
+One tiny module so every layer (core, kernels, data, launch, runtime) reads
+the same switches the same way — and so docs/performance.md has a single
+source of truth to point at. All flags are *opt-out*: the engine defaults to
+its fastest safe configuration and an operator can disable any layer
+independently to bisect a regression.
+
+  REPRO_PREFETCH        "0" disables device prefetch everywhere; an integer
+                        >= 1 sets the default double-buffer depth (default 2).
+                        Per-estimator override: ``HPClust(prefetch=...)``.
+  REPRO_DONATE          "0" disables buffer donation (state carries are then
+                        copied every window/step, the pre-PR-10 behaviour).
+  REPRO_AUTOTUNE        "0"/unset: kernel tile heuristics (default).
+                        "1": consult the autotune cache, heuristics on miss.
+                        "probe": consult; on miss, time candidate tiles and
+                        persist the winner (see repro.kernels.autotune).
+  REPRO_AUTOTUNE_CACHE  cache file path (default ~/.cache/repro/autotune.json).
+  REPRO_COMPUTE_DTYPE   "bf16" switches the Pallas assign/lloyd kernels to
+                        bf16 inputs with f32 accumulation (default "f32").
+
+Flags are read per call (they only gate Python-level dispatch decisions, so
+the cost is one dict lookup); dtype/autotune decisions become *static* jit
+arguments so a mid-process flip can never alias a stale compile-cache entry.
+"""
+from __future__ import annotations
+
+import os
+
+_TRUE = ("1", "true", "on", "yes")
+_FALSE = ("0", "false", "off", "no")
+
+
+def donate_enabled() -> bool:
+    """Buffer donation for the window/step state carries (default on)."""
+    return os.environ.get("REPRO_DONATE", "1").lower() not in _FALSE
+
+
+def prefetch_depth(override=None) -> int:
+    """Device-prefetch double-buffer depth; 0 disables.
+
+    ``override`` (``HPClust(prefetch=...)`` / ``fit_stream`` kwargs) wins over
+    the environment: ``False``/``0`` -> 0, ``True``/``None`` -> env default.
+    """
+    if override is not None and override is not True:
+        return max(0, int(override))
+    raw = os.environ.get("REPRO_PREFETCH", "2").lower()
+    if raw in _FALSE:
+        return 0
+    if raw in _TRUE:
+        return 2
+    try:
+        return max(0, int(raw))
+    except ValueError:
+        return 2
+
+
+def autotune_mode() -> str:
+    """'off' | 'on' (consult cache) | 'probe' (consult + time + persist)."""
+    raw = os.environ.get("REPRO_AUTOTUNE", "0").lower()
+    if raw in _FALSE or raw == "":
+        return "off"
+    if raw == "probe":
+        return "probe"
+    return "on"
+
+
+def autotune_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"),
+    )
+
+
+def compute_dtype(override: str | None = None) -> str:
+    """Kernel compute dtype: 'f32' (default) or 'bf16' (f32 accumulation)."""
+    dt = override or os.environ.get("REPRO_COMPUTE_DTYPE", "f32")
+    dt = dt.lower()
+    if dt in ("bf16", "bfloat16"):
+        return "bf16"
+    if dt in ("f32", "float32", ""):
+        return "f32"
+    raise ValueError(f"unknown compute dtype {dt!r} (want f32 or bf16)")

@@ -94,7 +94,10 @@ def _assign_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_valid", "block_s", "block_k", "block_d", "interpret"),
+    static_argnames=(
+        "k_valid", "block_s", "block_k", "block_d", "compute_dtype",
+        "interpret",
+    ),
 )
 def assign_pallas(
     x: jax.Array,
@@ -104,6 +107,7 @@ def assign_pallas(
     block_s: int = DEFAULT_BLOCK_S,
     block_k: int = DEFAULT_BLOCK_K,
     block_d: int = DEFAULT_BLOCK_D,
+    compute_dtype: str = "f32",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment. x: (s, d), c: (k, d) -> (idx, dist).
@@ -111,6 +115,10 @@ def assign_pallas(
     Inputs must already be padded to tile multiples (ops.py does this);
     ``k_valid`` marks how many leading rows of ``c`` are real — padded rows
     get +inf norms so they can never win the argmin.
+
+    ``compute_dtype="bf16"`` feeds the MXU bf16 point/centroid tiles (half
+    the VMEM traffic) while norms and the distance accumulator stay f32 —
+    the dot itself always uses ``preferred_element_type=f32``.
     """
     s, d = x.shape
     k, d2 = c.shape
@@ -123,11 +131,15 @@ def assign_pallas(
 
     xf = x.astype(jnp.float32)
     cf = c.astype(jnp.float32)
-    xn = jnp.sum(xf * xf, axis=1, keepdims=True)  # (s, 1)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)  # (s, 1) — norms stay f32
     cn = jnp.sum(cf * cf, axis=1)[None, :]  # (1, k)
     if k_valid is not None and k_valid < k:
         pad_mask = jnp.arange(k)[None, :] >= k_valid
         cn = jnp.where(pad_mask, jnp.inf, cn)
+    if compute_dtype == "bf16":
+        xk, ck = xf.astype(jnp.bfloat16), cf.astype(jnp.bfloat16)
+    else:
+        xk, ck = xf, cf
 
     kernel = functools.partial(_assign_kernel, nk=nk, nd=nd, bk=bk)
     idx, dist = pl.pallas_call(
@@ -153,5 +165,5 @@ def assign_pallas(
             pltpu.VMEM((bs, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(xn, cn, xf, cf)
+    )(xn, cn, xk, ck)
     return idx[:, 0], dist[:, 0]

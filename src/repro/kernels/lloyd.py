@@ -44,11 +44,12 @@ def _lloyd_kernel(
     ki = pl.program_id(1)
 
     x = x_ref[...]
-    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bs, 1)
+    xf = x.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)  # (bs, 1) — norms in f32
     dots = jax.lax.dot_general(
         x, c_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
-    )  # (bs, bk)
+    )  # (bs, bk) — bf16 inputs still accumulate in f32
     d2 = jnp.maximum(xn - 2.0 * dots + cn_ref[...], 0.0)
     local_min = jnp.min(d2, axis=1, keepdims=True)
     local_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None] + ki * bk
@@ -79,18 +80,25 @@ def _lloyd_kernel(
         # Mask padding rows (global row id >= s_valid): they must not
         # contribute to sums/counts.
         row_id = si * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)
-        live = (row_id < s_valid).astype(jnp.float32)
-        onehot = (winners == kk).astype(jnp.float32) * live  # (bs, K)
+        live = row_id < s_valid
+        # One-hot in x's dtype so the MXU sees matching operands (0/1 are
+        # exact in bf16); the dot still accumulates f32 into sums_ref.
+        onehot = ((winners == kk) & live).astype(x.dtype)  # (bs, K)
         sums_ref[...] += jax.lax.dot_general(
             onehot, x, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
-        counts_ref[...] += jnp.sum(onehot, axis=0)[:, None]
+        # Counts reduce in f32: a bf16 running count saturates at 256.
+        counts_ref[...] += jnp.sum(
+            onehot.astype(jnp.float32), axis=0)[:, None]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_valid", "s_valid", "block_s", "block_k", "interpret"),
+    static_argnames=(
+        "k_valid", "s_valid", "block_s", "block_k", "compute_dtype",
+        "interpret",
+    ),
 )
 def lloyd_pass_pallas(
     x: jax.Array,
@@ -100,11 +108,14 @@ def lloyd_pass_pallas(
     s_valid: int | None = None,
     block_s: int = 256,
     block_k: int = 128,
+    compute_dtype: str = "f32",
     interpret: bool = False,
 ):
     """One fused Lloyd pass. x (s, d), c (k, d) padded to tile multiples.
 
     Returns (idx (s,), dist (s,), sums (k, d) f32, counts (k,) f32).
+    ``compute_dtype="bf16"`` streams bf16 point/centroid tiles; norms,
+    distances, sums and counts all still accumulate in f32.
     """
     s, d = x.shape
     k = c.shape[0]
@@ -112,11 +123,14 @@ def lloyd_pass_pallas(
     assert s % bs == 0 and k % bk == 0, (s, k, bs, bk)
     ns, nk = s // bs, k // bk
 
-    xf = x.astype(jnp.float32)
     cf = c.astype(jnp.float32)
-    cn = jnp.sum(cf * cf, axis=1)[None, :]
+    cn = jnp.sum(cf * cf, axis=1)[None, :]  # centroid norms stay f32
     if k_valid is not None and k_valid < k:
         cn = jnp.where(jnp.arange(k)[None, :] >= k_valid, jnp.inf, cn)
+    if compute_dtype == "bf16":
+        xk, ck = x.astype(jnp.bfloat16), cf.astype(jnp.bfloat16)
+    else:
+        xk, ck = x.astype(jnp.float32), cf
 
     kernel = functools.partial(
         _lloyd_kernel, nk=nk, bk=bk, k_total=k, bs=bs,
@@ -147,5 +161,5 @@ def lloyd_pass_pallas(
             pltpu.VMEM((bs, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(cn, xf, cf)
+    )(cn, xk, ck)
     return idx[:, 0], dist[:, 0], sums, counts[:, 0]

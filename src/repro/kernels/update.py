@@ -84,9 +84,10 @@ def cluster_sums_pallas(
     s, d = x.shape
     assert idx.shape == (s,), (idx.shape, s)
     bs, bd = min(block_s, s), min(block_d, d)
-    kp = k if k % block_k == 0 else k + (block_k - k % block_k)
-    kp = max(kp, min(block_k, kp))
-    bk = min(block_k, kp)
+    # K pads up to the block (kp >= bk always), unlike s/d where the block
+    # shrinks to the data: out-of-range padding assignments need kp > k.
+    bk = block_k
+    kp = k + (-k) % bk
     assert s % bs == 0 and d % bd == 0 and kp % bk == 0, (s, d, kp, bs, bd, bk)
 
     sums, counts = pl.pallas_call(

@@ -27,8 +27,9 @@ from typing import Callable, Iterable, NamedTuple, Optional
 
 import numpy as np
 
-from repro import obs
+from repro import flags, obs
 from repro.core.strategies import HPClustConfig
+from repro.data import device_prefetch
 from repro.launch.mesh import make_host_mesh
 from repro.resilience.sharded_ckpt import (
     ShardedStreamCheckpointer,
@@ -76,10 +77,18 @@ def is_device_loss(exc: BaseException) -> bool:
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_sharded_runner(mesh, cfg, inner_axis="model", pod_axis=None):
-    """One compiled SPMD runner per (mesh, cfg) — shardings close over the
-    mesh, so caching here keeps the compile cache shared across windows and
-    across recoveries back onto a previously-seen mesh (JH003)."""
+def _jit_sharded_runner(mesh, cfg, inner_axis="model", pod_axis=None,
+                        donate=False):
+    """One compiled SPMD runner per (mesh, cfg, donate) — shardings close
+    over the mesh, so caching here keeps the compile cache shared across
+    windows and across recoveries back onto a previously-seen mesh (JH003).
+    ``donate`` is part of the cache key: the donating and non-donating
+    programs are distinct executables, so a flag flip can never alias a
+    stale entry.
+
+    Returns ``(jitted_runner, reservoir_sharding)``; the sharding is what
+    the device-prefetch thread uses to land windows directly in SPMD layout.
+    """
     import jax
 
     from repro.core import sharded
@@ -87,7 +96,11 @@ def _jit_sharded_runner(mesh, cfg, inner_axis="model", pod_axis=None):
     fn, in_sh, out_sh = sharded.build_sharded_runner(
         mesh, cfg, inner_axis=inner_axis, pod_axis=pod_axis
     )
-    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    jitted = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, in_sh[1]
 
 
 class ElasticResult(NamedTuple):
@@ -126,15 +139,22 @@ def run_elastic_sharded(
     max_recoveries: int = 2,
     kmeans_iters: int = 32,
     runner_wrapper: Optional[Callable] = None,
+    prefetch: int | bool | None = None,
 ) -> ElasticResult:
     """Run the sharded engine over ``stream`` windows, elastically.
 
     ``runner_wrapper`` (chaos hook) wraps the jitted runner — it is
     re-applied after every recompile, so invocation-counted injectors like
     ``drop_device_midstream`` keep their global count across mesh rebuilds.
+
+    ``prefetch`` (default: the ``REPRO_PREFETCH`` depth) double-buffers
+    windows onto the mesh: the background thread broadcasts each window to
+    the worker groups and ``jax.device_put``s it with the runner's reservoir
+    ``NamedSharding`` while the previous window computes. A mesh rebuild
+    bumps the placement epoch; windows placed for a dead mesh are re-placed
+    from their host copy before the retry.
     """
     import jax
-    import jax.numpy as jnp
 
     from repro.core import sharded
 
@@ -153,10 +173,21 @@ def run_elastic_sharded(
         return jax.device_get(state)
 
     excluded: set[int] = set()
+    donate = flags.donate_enabled()
     mesh = make_host_mesh(mesh_shape, exclude=())
     workers = _worker_count(mesh, inner_axis)
     cfg = make_cfg(workers)
-    run_fn = wrap(_jit_sharded_runner(mesh, cfg, inner_axis, pod_axis))
+    jitted, res_sharding = _jit_sharded_runner(
+        mesh, cfg, inner_axis, pod_axis, donate)
+    run_fn = wrap(jitted)
+
+    # (epoch, workers, reservoir sharding) — ONE tuple so the prefetch
+    # thread reads a consistent placement even while recover() swaps it.
+    placement = (0, workers, res_sharding)
+
+    def place(w: np.ndarray):
+        e, wk, sh = placement
+        return e, jax.device_put(np.broadcast_to(w, (wk,) + w.shape), sh)
 
     ckpt = (
         ShardedStreamCheckpointer(checkpoint_dir)
@@ -189,6 +220,7 @@ def run_elastic_sharded(
 
     def recover(exc: BaseException):
         nonlocal mesh, workers, cfg, run_fn, state, history, recoveries
+        nonlocal placement
         lost = set(getattr(exc, "lost_devices", ()) or ())
         excluded.update(lost)
         mesh = make_host_mesh(None, exclude=excluded)
@@ -205,7 +237,12 @@ def run_elastic_sharded(
         # A degraded mesh is rebuilt 2-axis; if the pod axis did not survive,
         # hybrid2 degrades gracefully to intra-mesh cooperation.
         pa = pod_axis if pod_axis in mesh.axis_names else None
-        run_fn = wrap(_jit_sharded_runner(mesh, cfg, inner_axis, pa))
+        jitted, res_sh = _jit_sharded_runner(mesh, cfg, inner_axis, pa,
+                                             donate)
+        run_fn = wrap(jitted)
+        # New epoch: windows the prefetch thread placed for the dead mesh
+        # are re-placed from their host copy at retry time.
+        placement = (placement[0] + 1, workers, res_sh)
         snap = ckpt.restore() if ckpt is not None else None
         if snap is not None:
             adopt(snap, event="sharded.resumed")
@@ -214,26 +251,42 @@ def run_elastic_sharded(
             state, history = st, np.asarray(hist, np.float32)
         recoveries += 1
 
+    # Sanitize stays off (this tier trusts its feed, as before); the thread
+    # still overlaps the f32 copy + broadcast + sharded H2D with compute.
+    windows_it = device_prefetch.device_stream(
+        stream,
+        depth=flags.prefetch_depth(prefetch),
+        sanitize=False,
+        start_at=windows_done,
+        place=place,
+    )
     try:
-        for wi, window in enumerate(stream):
-            if wi < windows_done:
-                continue  # consumed before the resume point
-            window = np.asarray(window, np.float32)
+        for item in windows_it:
+            wi = item.index
             if state is None:
                 state = sharded.init_sharded_state(
-                    cfg, window.shape[1], seed=seed
+                    cfg, item.host.shape[1], seed=seed
                 )
             while True:
-                reservoir = np.broadcast_to(
-                    window, (workers,) + window.shape
-                )
+                epoch, reservoir = item.device
+                if epoch != placement[0]:
+                    # Placed for a mesh that no longer exists: redo the H2D
+                    # from the host copy with the surviving mesh's sharding.
+                    _, reservoir = place(item.host)
                 try:
                     with obs.span("sharded.window", window=wi,
                                   workers=workers):
-                        new_state, objs = run_fn(
-                            state, jnp.asarray(reservoir)
-                        )
-                        jax.block_until_ready(new_state)
+                        # Donation deletes the input state's buffers even on
+                        # a failed step — the host backup keeps the recovery
+                        # and crash-save paths readable.
+                        backup = to_host(state) if donate else None
+                        try:
+                            new_state, objs = run_fn(state, reservoir)
+                            jax.block_until_ready(new_state)
+                        except BaseException:
+                            if backup is not None:
+                                state = backup
+                            raise
                 except Exception as e:  # noqa: BLE001 - triaged below
                     if not is_device_loss(e) or recoveries >= max_recoveries:
                         raise
@@ -257,6 +310,8 @@ def run_elastic_sharded(
             except Exception:  # pragma: no cover - best effort
                 pass
         raise
+    finally:
+        windows_it.close()  # deterministic prefetch-thread shutdown
 
     if state is None:
         raise ValueError("empty stream: nothing to cluster")

@@ -16,7 +16,7 @@ import json
 import jax
 import numpy as np
 
-from repro import obs
+from repro import flags, obs
 from repro.configs import get_config
 from repro.data import token_batches
 from repro.launch import steps as S
@@ -25,10 +25,16 @@ from repro.runtime import Trainer, TrainerConfig
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_train_step(cfg, lr_steps: int):
-    """One compiled train step per (cfg, schedule) — cached so repeated main()
-    invocations in one process (tests) share the compile cache (JH003)."""
-    return jax.jit(S.make_train_step(cfg, lr_steps=lr_steps, grad_accum=1))
+def _jit_train_step(cfg, lr_steps: int, donate: bool = False):
+    """One compiled train step per (cfg, schedule, donate) — cached so
+    repeated main() invocations in one process (tests) share the compile
+    cache (JH003). ``donate`` reuses the params/opt_state buffers for the
+    step outputs (REPRO_DONATE); it keys the cache so the donating and
+    copying programs never alias. Checkpointing stays safe because
+    ``CheckpointManager.save`` host-gathers synchronously BEFORE the next
+    step can donate the saved buffers (see runtime/trainer.py)."""
+    step = S.make_train_step(cfg, lr_steps=lr_steps, grad_accum=1)
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
 
 def batches_for(cfg, batch, seq, seed=0):
@@ -74,7 +80,7 @@ def main(argv=None):
         obs.configure(jsonl=args.trace)
     try:
         cfg = get_config(args.arch, smoke=args.smoke)
-        step_fn = _jit_train_step(cfg, args.steps)
+        step_fn = _jit_train_step(cfg, args.steps, flags.donate_enabled())
         opt = step_fn.__wrapped__.optimizer
 
         def init_state():

@@ -133,6 +133,12 @@ class Trainer:
                 self.failure_at.discard(step)
                 raise StepFailure(f"injected failure at step {step}")
             batch = next(self.data)
+            # step_fn may DONATE params/opt_state (REPRO_DONATE, see
+            # launch/train.py): after this call only the returned values may
+            # be touched. Every read below (checkpoint, preempt-save,
+            # metrics) uses the outputs, and CheckpointManager.save
+            # host-gathers synchronously before returning, so the next
+            # step's donation can never invalidate an in-flight save.
             with obs.span("train.step", step=step):
                 params, opt_state, metrics = self.step_fn(
                     params, opt_state, batch)
